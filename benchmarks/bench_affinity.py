@@ -1,0 +1,28 @@
+"""Fig 7 analogue: partition-axis comparison (the paper compared
+core-based vs thread-based OpenMP affinity; the TPU analogue is which
+GEMM dimension the submesh shards — M / N / K / 2D placement)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import GemmConfig, estimate_gemm_time
+from repro.core.halton import sample_gemm_dims
+
+
+def run() -> list[str]:
+    dims = sample_gemm_dims(40, mem_limit_bytes=500 * 2**20, seed=99)
+    lines = []
+    for chips in (4, 16, 64, 256):
+        for part in ("M", "N", "K", "2D"):
+            ts = [estimate_gemm_time(int(m), int(k), int(n),
+                                     GemmConfig(chips, part, 3)).total_s
+                  for m, k, n in dims]
+            lines.append(
+                f"fig7_partition_{part}_{chips}chips,"
+                f"{float(np.mean(ts))*1e6:.2f},mean_us")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

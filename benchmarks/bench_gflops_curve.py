@@ -1,0 +1,41 @@
+"""Figs 11/12: GFLOPS vs GEMM memory occupancy, ADSALA vs default."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import simulated_run
+from repro.core import AdsalaTuner
+from repro.core.halton import gemm_bytes, sample_gemm_dims
+
+
+def run(n_points: int = 48) -> list[str]:
+    backend, icfg, _, _, art = simulated_run(500)
+    tuner = AdsalaTuner.from_artifact(art)
+    dims = sample_gemm_dims(n_points, mem_limit_bytes=500 * 2**20,
+                            seed=777)
+    sizes = gemm_bytes(dims[:, 0], dims[:, 1], dims[:, 2],
+                       icfg.dtype_bytes)
+    edges = [0, 20, 100, 250, 500]
+    lines = []
+    for lo, hi in zip(edges[:-1], edges[1:]):
+        mask = (sizes > lo * 2**20) & (sizes <= hi * 2**20)
+        if mask.sum() < 3:
+            continue
+        g_a, g_d = [], []
+        for m, k, n in dims[mask]:
+            m, k, n = int(m), int(k), int(n)
+            flops = 2.0 * m * k * n
+            t_c = backend.time_gemm_clean(m, k, n, tuner.select(m, k, n))
+            t_d = backend.time_gemm_clean(m, k, n, icfg.default_config)
+            g_a.append(flops / t_c / 1e9)
+            g_d.append(flops / t_d / 1e9)
+        lines.append(
+            f"fig1112_{lo}_{hi}mb,{float(np.mean(g_a)):.1f},"
+            f"gflops_adsala;default={float(np.mean(g_d)):.1f};"
+            f"n={int(mask.sum())}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,36 @@
+"""Fig 9 analogue: optimal worker count vs (m, k, n) — grid CSV."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import simulated_run
+
+
+def run() -> list[str]:
+    _, _, data, _, _ = simulated_run(500)
+    chips = np.array([c.n_chips for c in data.cfgs])
+    opt = chips[data.optimal_worker_index()]
+    # bucket by (max_dim, min_dim) octaves — the heatmap's axes
+    lines = []
+    mx = data.dims.max(axis=1)
+    mn = data.dims.min(axis=1)
+    for lo, hi, tag in ((0, 1024, "small"), (1024, 8192, "mid"),
+                        (8192, 10**9, "large")):
+        mask = (mx >= lo) & (mx < hi)
+        if mask.sum() >= 3:
+            lines.append(
+                f"fig9_maxdim_{tag},{float(np.median(opt[mask])):.0f},"
+                f"median_chips;n={int(mask.sum())}")
+    for lo, hi, tag in ((0, 256, "slim"), (256, 4096, "mid"),
+                        (4096, 10**9, "square")):
+        mask = (mn >= lo) & (mn < hi)
+        if mask.sum() >= 3:
+            lines.append(
+                f"fig9_mindim_{tag},{float(np.median(opt[mask])):.0f},"
+                f"median_chips;n={int(mask.sum())}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

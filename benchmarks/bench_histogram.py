@@ -1,0 +1,41 @@
+"""Fig 1 / Fig 8: histogram of the optimal worker count.
+
+Paper finding: "thread counts lower than the maximum often provide
+better GEMM wall-time".  TPU translation: optimal chip counts across the
+sampled GEMM domain, overall (<=100 MB, Fig 1) and for the small-dim
+subset (min(m,k,n) < 1000, Fig 8).
+"""
+
+from __future__ import annotations
+
+import collections
+
+import numpy as np
+
+from benchmarks.common import simulated_run
+
+
+def run() -> list[str]:
+    _, cfg, data, _, _ = simulated_run(100)
+    chips = np.array([c.n_chips for c in data.cfgs])
+    opt = chips[data.optimal_worker_index()]
+    lines = []
+    hist = collections.Counter(opt)
+    for c in sorted(hist):
+        lines.append(f"fig1_hist_chips_{c},{hist[c]},count")
+    frac_below_max = float(np.mean(opt < chips.max()))
+    lines.append(f"fig1_frac_optimal_below_max,{frac_below_max:.3f},frac")
+
+    small = data.dims.min(axis=1) < 1000
+    if small.any():
+        opt_small = opt[small]
+        med = float(np.median(opt_small))
+        lines.append(f"fig8_small_dim_median_chips,{med},chips")
+        lines.append(
+            "fig8_small_dim_frac_below_half_max,"
+            f"{float(np.mean(opt_small < chips.max() / 2)):.3f},frac")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

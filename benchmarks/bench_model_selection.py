@@ -1,0 +1,51 @@
+"""Tables III/IV: model performance + estimated speedups per platform.
+
+Columns match the paper: normalised test RMSE, ideal mean/aggregate
+speedup, model evaluation time (µs), estimated mean/aggregate speedup —
+plus the cache-amortised (warm) columns this implementation adds.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import measured_run, simulated_run
+
+
+def _rows_from_dicts(tag: str, reports: list[dict],
+                     selected: str) -> list[str]:
+    lines = []
+    for r in reports:
+        lines.append(
+            f"{tag}_{r['name']},{r['eval_time_us']:.1f},"
+            f"nrmse={r['normalised_rmse']:.3f};"
+            f"ideal={r['ideal_mean_speedup']:.3f};"
+            f"est={r['est_mean_speedup']:.3f};"
+            f"warm={r['warm_est_mean_speedup']:.3f}")
+    lines.append(f"{tag}_selected,0,{selected}")
+    return lines
+
+
+def _rows(tag: str, report) -> list[str]:
+    return _rows_from_dicts(tag, [r.to_dict() for r in report.reports],
+                            report.selected)
+
+
+def run() -> list[str]:
+    lines = []
+    *_, report, art = simulated_run(500)
+    if report is not None:
+        lines += _rows("table3_v5esim", report)
+    else:  # cached install: the selection table lives in the artifact
+        with open(os.path.join(art, "config.json")) as f:
+            c = json.load(f)
+        lines += _rows_from_dicts("table3_v5esim", c["selection"],
+                                  c["selected"])
+    *_, report_m, _ = measured_run()
+    lines += _rows("table4_cpumeas", report_m)
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,43 @@
+"""Figs 13/14: GFLOPS on predesigned matrices (m=k=n; one small dim;
+two small dims), ADSALA-chosen vs default all-chips."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import simulated_run
+from repro.core import AdsalaTuner
+
+
+def _gflops(m, k, n, t):
+    return 2.0 * m * k * n / max(t, 1e-12) / 1e9
+
+
+def run() -> list[str]:
+    backend, icfg, _, _, art = simulated_run(500)
+    tuner = AdsalaTuner.from_artifact(art)
+    sweep = [256, 1024, 4096, 16384]
+    small = 64
+    cases = []
+    for s in sweep:
+        cases.append(("square", (s, s, s)))
+        cases.append(("small_m", (small, s, s)))
+        cases.append(("small_k", (s, small, s)))
+        cases.append(("small_n", (s, s, small)))
+        cases.append(("small_kn", (s, small, small)))
+        cases.append(("small_mk", (small, small, s)))
+    lines = []
+    for tag, (m, k, n) in cases:
+        chosen = tuner.select(m, k, n)
+        t_c = backend.time_gemm_clean(m, k, n, chosen)
+        t_d = backend.time_gemm_clean(m, k, n, icfg.default_config)
+        lines.append(
+            f"fig1314_{tag}_{m}x{k}x{n},{t_c*1e6:.2f},"
+            f"gflops_adsala={_gflops(m,k,n,t_c):.1f};"
+            f"gflops_default={_gflops(m,k,n,t_d):.1f};"
+            f"speedup={t_d/t_c:.2f};chips={chosen.n_chips}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

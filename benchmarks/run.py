@@ -1,0 +1,67 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Modules share a cached ADSALA
+install run per platform (benchmarks/common.py); ADSALA_BENCH_FULL=1
+raises the install budget to paper scale.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_ablation,
+        bench_affinity,
+        bench_breakdown,
+        bench_gflops_curve,
+        bench_heatmap,
+        bench_histogram,
+        bench_model_selection,
+        bench_predesigned,
+        bench_roofline,
+        bench_speedup_stats,
+    )
+    suites = [
+        ("fig1_fig8_histogram", bench_histogram.run),
+        ("fig9_heatmap", bench_heatmap.run),
+        ("table3_table4_model_selection", bench_model_selection.run),
+        ("table5_table6_speedup_stats", bench_speedup_stats.run),
+        ("fig11_fig12_gflops_curve", bench_gflops_curve.run),
+        ("fig13_fig14_predesigned", bench_predesigned.run),
+        ("table7_breakdown", bench_breakdown.run),
+        ("fig7_affinity", bench_affinity.run),
+        ("ablation_preprocessing", bench_ablation.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites:
+        t0 = time.time()
+        try:
+            for line in fn():
+                print(line)
+            print(f"suite_{name},{(time.time()-t0)*1e6:.0f},wall_us")
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"suite_{name},0,FAILED")
+    # roofline table (one row per dry-run cell)
+    try:
+        rows = bench_roofline.run(csv=False)
+        for r in rows:
+            print(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']},"
+                  f"{r['total_ms']*1e3:.0f},"
+                  f"dominant={r['dominant']};"
+                  f"fraction={r['roofline_fraction']:.3f};"
+                  f"useful={r['useful_ratio']:.3f}")
+    except Exception:
+        failures += 1
+        traceback.print_exc()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == '__main__':
+    main()

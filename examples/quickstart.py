@@ -1,0 +1,60 @@
+"""Quickstart: the full ADSALA workflow in one minute on one CPU.
+
+1. install  — gather GEMM timings on the TPU-v5e analytic platform,
+              train + select the runtime model (paper Fig 2),
+2. runtime  — load the artifact, let the tuner pick worker configs
+              (paper Fig 3),
+3. verify   — tuned configs beat the all-chips default.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import (
+    AdsalaTuner,
+    InstallConfig,
+    SimulatedBackend,
+    gather_data,
+    install,
+)
+
+ART = "/tmp/adsala_quickstart"
+
+
+def main() -> None:
+    # -- 1. installation (small budget for the demo) -----------------------
+    cfg = InstallConfig(
+        n_samples=100, repeats=2, tile_ids=(0, 3),
+        models=("linear_regression", "bayesian_regression",
+                "decision_tree", "xgboost"),
+        grid_budget="small", cv_splits=3, seed=0)
+    backend = SimulatedBackend(seed=0)
+    print("== install: gathering timings on the v5e analytic platform ==")
+    data = gather_data(backend, cfg)
+    report = install(backend, cfg, data=data, artifact_dir=ART)
+    print(report.table())
+
+    # -- 2. runtime ----------------------------------------------------------
+    print("\n== runtime: tuner decisions ==")
+    tuner = AdsalaTuner.from_artifact(ART)
+    for (m, k, n) in [(64, 2048, 64), (64, 64, 4096), (512, 512, 512),
+                      (8192, 8192, 8192), (30000, 200, 30000)]:
+        c = tuner.select(m, k, n)
+        print(f"GEMM {m:>6}x{k:>6}x{n:>6} -> {c.n_chips:>3} chips, "
+              f"partition {c.partition:>2}, tile {c.tile}")
+
+    # -- 3. verify -------------------------------------------------------------
+    rng = np.random.default_rng(0)
+    t_def = t_tuned = 0.0
+    for _ in range(30):
+        m, k, n = (int(x) for x in rng.integers(64, 8192, 3))
+        t_tuned += backend.time_gemm_clean(m, k, n, tuner.select(m, k, n))
+        t_def += backend.time_gemm_clean(m, k, n, cfg.default_config)
+    print(f"\naggregate speedup vs all-512-chips default: "
+          f"{t_def / t_tuned:.2f}x")
+    print(f"tuner stats: {tuner.stats}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Serving example: batched generation with the ADSALA tuner in the loop
+(paper Fig 3 runtime workflow), using the stablelm-1.6b smoke config.
+
+Run:  PYTHONPATH=src python examples/serve_with_tuner.py
+"""
+
+import os
+import subprocess
+import sys
+
+
+def main() -> None:
+    # build a tuner artifact if missing (tiny install)
+    art = "/tmp/adsala_quickstart"
+    if not os.path.exists(os.path.join(art, "model.json")):
+        print("[serve-example] building tuner artifact first ...")
+        subprocess.run([sys.executable, "examples/quickstart.py"],
+                       check=True, env={**os.environ,
+                                        "PYTHONPATH": "src"})
+    subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve",
+         "--arch", "stablelm-1.6b", "--scale", "smoke",
+         "--requests", "4", "--prompt-len", "32", "--gen-tokens", "12",
+         "--artifact", art],
+        check=True, env={**os.environ, "PYTHONPATH": "src"})
+
+
+if __name__ == "__main__":
+    main()

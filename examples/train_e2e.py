@@ -1,0 +1,67 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps.
+
+Uses the xlstm-125m assigned architecture at its REAL width (125M
+params) on CPU with a short sequence so a few hundred steps complete in
+minutes, exercising the full production stack: data pipeline ->
+prefetch -> jit train step -> fault-tolerant driver -> checkpoints.
+
+Run:  PYTHONPATH=src python examples/train_e2e.py [--steps 300]
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, build_model
+from repro.data.pipeline import Prefetcher, SyntheticLM
+from repro.ft.driver import DriverConfig, TrainDriver
+from repro.train.optim import AdamWConfig
+from repro.train.step import build_train_step, init_train_state
+from repro.models.config import ShapeSpec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="/tmp/adsala_train_e2e")
+    args = ap.parse_args()
+
+    # the real 125M config, shortened depth for CPU wall-clock sanity
+    cfg = dataclasses.replace(get_config("xlstm-125m"), n_layers=4)
+    model = build_model(cfg)
+    shape = ShapeSpec("e2e", args.seq, args.batch, "train")
+    opt = AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps)
+
+    step_fn, _, _ = build_train_step(model, cfg, shape, None, opt)
+    jit_step = jax.jit(step_fn, donate_argnums=(0,))
+    state = init_train_state(model, cfg, opt, jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree.leaves(state["params"]))
+    print(f"[e2e] {cfg.name}: {n_params/1e6:.1f}M params, "
+          f"{args.steps} steps of {args.batch}x{args.seq}")
+
+    src = SyntheticLM(cfg.vocab, args.seq, args.batch, seed=0)
+    data = ({k: jnp.asarray(v) for k, v in b.items()}
+            for b in Prefetcher(iter(src), depth=2))
+
+    driver = TrainDriver(
+        DriverConfig(ckpt_dir=args.ckpt_dir, ckpt_every=50,
+                     max_steps=args.steps),
+        jit_step, state, data)
+    t0 = time.perf_counter()
+    summary = driver.run()
+    dt = time.perf_counter() - t0
+    hist = driver.metrics_history
+    print(f"[e2e] loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f} "
+          f"over {summary['step']} steps ({dt:.0f}s, "
+          f"{summary['step']/dt:.2f} steps/s)")
+    assert hist[-1]["loss"] < hist[0]["loss"], "training did not learn"
+    print("[e2e] OK — loss decreased; checkpoints in", args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Architecture registry: ``--arch <id>`` resolves here."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ArchConfig
+
+__all__ = ["ARCH_IDS", "get_config", "get_smoke_config", "build_model"]
+
+_MODULES = {
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+    "starcoder2-3b": "repro.configs.starcoder2_3b",
+    "granite-8b": "repro.configs.granite_8b",
+    "chatglm3-6b": "repro.configs.chatglm3_6b",
+    "stablelm-1.6b": "repro.configs.stablelm_1_6b",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+    "chameleon-34b": "repro.configs.chameleon_34b",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+    "xlstm-125m": "repro.configs.xlstm_125m",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; have {list(_MODULES)}")
+    return importlib.import_module(_MODULES[arch_id]).CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ArchConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; have {list(_MODULES)}")
+    return importlib.import_module(_MODULES[arch_id]).smoke_config()
+
+
+def build_model(cfg: ArchConfig):
+    """Family dispatch: decoder-only LM vs encoder-decoder."""
+    if cfg.family == "audio":
+        from repro.models.encdec import build_encdec
+        return build_encdec(cfg)
+    from repro.models.transformer import build_lm
+    return build_lm(cfg)

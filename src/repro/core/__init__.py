@@ -1,0 +1,37 @@
+"""ADSALA core: the paper's contribution as a composable library.
+
+Pipeline:  halton -> timing backend -> features/preprocessing -> ml zoo
+           -> installer (Fig 2) -> artifact -> AdsalaTuner (Fig 3)
+           -> tuned GEMM dispatch (repro.kernels.ops.tuned_matmul).
+"""
+
+from repro.core.costmodel import (
+    DEFAULT_TILES,
+    GemmConfig,
+    TimeBreakdown,
+    TPUSpec,
+    candidate_configs,
+    estimate_gemm_time,
+)
+from repro.core.halton import gemm_bytes, sample_gemm_dims, scrambled_halton
+from repro.core.installer import (
+    DEFAULT_WORKER_CONFIG,
+    GatheredData,
+    InstallConfig,
+    InstallReport,
+    gather_data,
+    install,
+    load_artifact,
+)
+from repro.core.timing import MeasuredCPUBackend, SimulatedBackend
+from repro.core.tuner import AdsalaTuner
+
+__all__ = [
+    "TPUSpec", "GemmConfig", "TimeBreakdown", "DEFAULT_TILES",
+    "candidate_configs", "estimate_gemm_time",
+    "scrambled_halton", "sample_gemm_dims", "gemm_bytes",
+    "InstallConfig", "GatheredData", "InstallReport", "gather_data",
+    "install", "load_artifact", "DEFAULT_WORKER_CONFIG",
+    "SimulatedBackend", "MeasuredCPUBackend",
+    "AdsalaTuner",
+]

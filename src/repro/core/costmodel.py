@@ -1,0 +1,243 @@
+"""Calibrated TPU v5e analytic performance model for distributed GEMM.
+
+This is the install-time "timing program" of the paper (§III-B) for the
+TPU target: the container is CPU-only, so GEMM timings at every candidate
+worker configuration are produced by an analytic model of a v5e pod
+instead of wall-clock measurement (DESIGN.md §Hardware adaptation).  The
+model is intentionally *not* smooth: it contains wave quantisation on the
+MXU grid, VMEM-overflow cliffs, ICI latency floors and lognormal noise,
+so the learning problem retains the character of the paper's measured
+data (skewed features, heteroscedastic noise, non-obvious optimum).
+
+The same formulas (without noise) are reused by the roofline analysis —
+keeping the tuner's world model and the §Roofline arithmetic consistent.
+
+Hardware constants (per chip, TPU v5e):
+  197 TFLOP/s bf16 peak · 819 GB/s HBM · ~50 GB/s/link ICI ·
+  128 MB VMEM · MXU 128x128 systolic array.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable
+
+import numpy as np
+
+__all__ = [
+    "TPUSpec", "GemmConfig", "TimeBreakdown", "candidate_configs",
+    "estimate_gemm_time", "estimate_batch", "DEFAULT_TILES",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUSpec:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12          # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9               # bytes/s per chip
+    ici_bw: float = 50e9                # bytes/s per link
+    ici_links: int = 4                  # links per chip (2D torus)
+    vmem_bytes: int = 128 * 2**20
+    mxu_dim: int = 128                  # systolic array edge
+    launch_overhead_s: float = 2e-6       # per kernel launch
+    collective_latency_s: float = 0.2e-6  # ICI per-hop latency
+    collective_dispatch_s: float = 5e-6   # software cost per collective
+    max_chips: int = 512
+
+    @property
+    def ici_bw_total(self) -> float:
+        return self.ici_bw * self.ici_links
+
+
+# Kernel tile presets (bm, bk, bn).  Index = "tile_id" feature.
+DEFAULT_TILES: tuple[tuple[int, int, int], ...] = (
+    (128, 128, 128),
+    (256, 128, 256),
+    (128, 512, 128),
+    (256, 256, 256),
+    (512, 128, 512),
+    (512, 512, 512),
+    (128, 128, 512),
+    (512, 128, 128),
+)
+
+_PARTITIONS = ("M", "N", "K", "2D")
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmConfig:
+    """One candidate worker configuration = the paper's 'thread count'.
+
+    n_chips   — submesh size the GEMM is dispatched on (1..512)
+    partition — which GEMM dimension(s) the submesh shards
+    tile_id   — index into DEFAULT_TILES for the per-chip Pallas kernel
+    """
+    n_chips: int
+    partition: str
+    tile_id: int
+
+    @property
+    def tile(self) -> tuple[int, int, int]:
+        return DEFAULT_TILES[self.tile_id]
+
+    @property
+    def config_id(self) -> int:
+        """Stable integer id (used for memoisation / logging)."""
+        return (self.tile_id * len(_PARTITIONS)
+                + _PARTITIONS.index(self.partition)) * 1024 + self.n_chips
+
+
+@dataclasses.dataclass
+class TimeBreakdown:
+    """Per-term decomposition, mirroring the paper's Table VII columns:
+    kernel-call (compute), data-copy (memory), thread-sync (collective)."""
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    launch_s: float
+
+    @property
+    def total_s(self) -> float:
+        # compute and HBM traffic overlap inside the kernel (systolic
+        # pipeline); collectives + launches serialise with the kernel.
+        return max(self.compute_s, self.memory_s) + self.collective_s \
+            + self.launch_s
+
+
+def candidate_configs(max_chips: int = 512, *,
+                      tiles: Iterable[int] | None = None,
+                      partitions: Iterable[str] = _PARTITIONS
+                      ) -> list[GemmConfig]:
+    """The candidate set the tuner argmins over (paper: 1..n_cores)."""
+    chips = [2 ** i for i in range(int(math.log2(max_chips)) + 1)]
+    tile_ids = list(tiles) if tiles is not None else list(
+        range(len(DEFAULT_TILES)))
+    out = []
+    for c in chips:
+        for p in partitions:
+            if p == "2D" and c < 4:
+                continue  # 2D sharding needs a 2D submesh
+            for t in tile_ids:
+                out.append(GemmConfig(c, p, t))
+    return out
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _local_shape(m: int, k: int, n: int, cfg: GemmConfig
+                 ) -> tuple[int, int, int]:
+    """Per-chip GEMM extents under the chosen partitioning."""
+    p = cfg.n_chips
+    if cfg.partition == "M":
+        return _ceil_div(m, p), k, n
+    if cfg.partition == "N":
+        return m, k, _ceil_div(n, p)
+    if cfg.partition == "K":
+        return m, _ceil_div(k, p), n
+    # 2D: factor p into the two most square factors, shard M x N
+    pm = 2 ** (int(math.log2(p)) // 2)
+    pn = p // pm
+    return _ceil_div(m, pm), k, _ceil_div(n, pn)
+
+
+def _collective_bytes(m: int, k: int, n: int, cfg: GemmConfig,
+                      dtype_bytes: int) -> tuple[float, int]:
+    """(bytes per chip moved over ICI, number of collective phases)."""
+    p = cfg.n_chips
+    if p == 1:
+        return 0.0, 0
+    frac = (p - 1) / p
+    if cfg.partition == "M":      # all-gather B
+        return frac * k * n * dtype_bytes, 1
+    if cfg.partition == "N":      # all-gather A
+        return frac * m * k * dtype_bytes, 1
+    if cfg.partition == "K":      # all-reduce partial C (2x traffic)
+        return 2.0 * frac * m * n * dtype_bytes, 2
+    # 2D: all-gather A along pn ring, B along pm ring
+    pm = 2 ** (int(math.log2(p)) // 2)
+    pn = p // pm
+    bytes_a = (pn - 1) / pn * (m // max(pm, 1)) * k * dtype_bytes
+    bytes_b = (pm - 1) / pm * k * (n // max(pn, 1)) * dtype_bytes
+    return bytes_a + bytes_b, 2
+
+
+def estimate_gemm_time(m: int, k: int, n: int, cfg: GemmConfig,
+                       spec: TPUSpec = TPUSpec(), *,
+                       dtype_bytes: int = 2,
+                       rng: np.random.Generator | None = None
+                       ) -> TimeBreakdown:
+    """Analytic runtime of C[m,n] = A[m,k] @ B[k,n] under ``cfg``.
+
+    Terms:
+      compute    — wave-quantised MXU time for the per-chip tile grid
+      memory     — HBM traffic incl. tile re-reads (blocked GEMM reads A
+                   once per N-block column and B once per M-block row)
+      collective — ICI ring time + per-hop latency floor
+      launch     — per-kernel-invocation overhead
+    Noise (rng given): multiplicative lognormal + rare straggler spikes.
+    """
+    lm, lk, ln = _local_shape(m, k, n, cfg)
+    bm, bk, bn = cfg.tile
+    bm, bk, bn = min(bm, _pad(lm)), min(bk, _pad(lk)), min(bn, _pad(ln))
+
+    gm, gk, gn = _ceil_div(lm, bm), _ceil_div(lk, bk), _ceil_div(ln, bn)
+
+    # ---- compute: padded-tile FLOPs at MXU efficiency --------------------
+    mxu = spec.mxu_dim
+    eff_m = bm / (_ceil_div(bm, mxu) * mxu)
+    eff_n = bn / (_ceil_div(bn, mxu) * mxu)
+    # sub-128 K still fills the pipeline after warmup; mild penalty
+    eff_k = min(1.0, (bk + 16) / mxu) if bk < mxu else 1.0
+    mxu_eff = max(eff_m * eff_n * min(eff_k, 1.0), 0.02)
+    flops = 2.0 * (gm * bm) * (gk * bk) * (gn * bn)
+    compute_s = flops / (spec.peak_flops * mxu_eff)
+
+    # ---- memory: blocked-GEMM HBM traffic --------------------------------
+    bytes_a = lm * lk * gn * dtype_bytes          # A re-read per N block col
+    bytes_b = lk * ln * gm * dtype_bytes          # B re-read per M block row
+    bytes_c = lm * ln * (dtype_bytes + 2 * dtype_bytes * (gk - 1))
+    # VMEM overflow cliff: working set beyond VMEM spills accumulators
+    working = (bm * bk + bk * bn + bm * bn) * dtype_bytes * 2  # dbl buffer
+    spill = 1.0 if working <= spec.vmem_bytes else 4.0
+    memory_s = spill * (bytes_a + bytes_b + bytes_c) / spec.hbm_bw
+
+    # ---- collective: ring bandwidth + latency floor -----------------------
+    coll_bytes, phases = _collective_bytes(m, k, n, cfg, dtype_bytes)
+    hops = max(cfg.n_chips - 1, 0)
+    collective_s = (coll_bytes / spec.ici_bw_total
+                    + phases * (hops * spec.collective_latency_s
+                                + spec.collective_dispatch_s))
+
+    launch_s = spec.launch_overhead_s * max(1.0, math.log2(cfg.n_chips + 1))
+
+    tb = TimeBreakdown(compute_s, memory_s, collective_s, launch_s)
+    if rng is not None:
+        jitter = float(np.exp(rng.normal(0.0, 0.05)))
+        straggler = 1.0
+        if cfg.n_chips > 1 and rng.random() < 0.01:   # rare straggler
+            straggler = 1.0 + float(rng.exponential(0.5))
+        tb = TimeBreakdown(compute_s * jitter, memory_s * jitter,
+                           collective_s * jitter * straggler, launch_s)
+    return tb
+
+
+def _pad(x: int) -> int:
+    """Round up to the sublane multiple (8) so tiny dims stay legal."""
+    return max(8, _ceil_div(x, 8) * 8)
+
+
+def estimate_batch(dims: np.ndarray, cfgs: list[GemmConfig],
+                   spec: TPUSpec = TPUSpec(), *, dtype_bytes: int = 2,
+                   seed: int | None = 0) -> np.ndarray:
+    """Runtime matrix, shape (len(dims), len(cfgs)); noisy if seed given."""
+    rng = np.random.default_rng(seed) if seed is not None else None
+    out = np.empty((len(dims), len(cfgs)))
+    for i, (m, k, n) in enumerate(np.asarray(dims, dtype=np.int64)):
+        for j, cfg in enumerate(cfgs):
+            out[i, j] = estimate_gemm_time(
+                int(m), int(k), int(n), cfg, spec,
+                dtype_bytes=dtype_bytes, rng=rng).total_s
+    return out

@@ -1,0 +1,71 @@
+"""Feature engineering for GEMM runtime regression (paper Table II).
+
+Group 1 (serial terms):   m, k, n, n_workers, m*k, m*n, k*n, m*k*n,
+                          m*k + k*n + m*n
+Group 2 (parallel terms): m/t, k/t, n/t, m*k/t, m*n/t, k*n/t, m*k*n/t,
+                          (m*k + k*n + m*n)/t        with t = n_workers
+
+On TPU the "worker" is a (submesh chips × kernel tile) configuration id;
+the feature map receives the *chip count* as ``n_workers`` plus a tile
+index — see DESIGN.md §Hardware adaptation.  The tile index enters as an
+extra categorical-as-numeric column so the identical Table II structure
+is preserved.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["FEATURE_NAMES", "build_features", "build_features_single"]
+
+FEATURE_NAMES: list[str] = [
+    # Group 1 — serial terms
+    "m", "k", "n", "n_workers",
+    "m*k", "m*n", "k*n", "m*k*n", "m*k+k*n+m*n",
+    # Group 2 — parallel terms
+    "m/t", "k/t", "n/t",
+    "m*k/t", "m*n/t", "k*n/t", "m*k*n/t", "(m*k+k*n+m*n)/t",
+    # TPU extension: kernel tile configuration id (0 when tuning chips only)
+    # and the sharded-dimension id (0=M, 1=N, 2=K, 3=2D)
+    "tile_id",
+    "partition_id",
+]
+
+
+def build_features(m: np.ndarray, k: np.ndarray, n: np.ndarray,
+                   n_workers: np.ndarray,
+                   tile_id: np.ndarray | int = 0,
+                   partition_id: np.ndarray | int = 0) -> np.ndarray:
+    """Vectorised Table II feature matrix, shape (N, len(FEATURE_NAMES))."""
+    m = np.asarray(m, dtype=np.float64)
+    k = np.asarray(k, dtype=np.float64)
+    n = np.asarray(n, dtype=np.float64)
+    t = np.asarray(n_workers, dtype=np.float64)
+    tile = np.broadcast_to(np.asarray(tile_id, dtype=np.float64), m.shape)
+    part = np.broadcast_to(np.asarray(partition_id, dtype=np.float64),
+                           m.shape)
+
+    mk = m * k
+    mn = m * n
+    kn = k * n
+    mkn = m * k * n
+    tot = mk + kn + mn
+
+    cols = [
+        m, k, n, t,
+        mk, mn, kn, mkn, tot,
+        m / t, k / t, n / t,
+        mk / t, mn / t, kn / t, mkn / t, tot / t,
+        tile,
+        part,
+    ]
+    return np.stack(cols, axis=1)
+
+
+def build_features_single(m: int, k: int, n: int, n_workers: int,
+                          tile_id: int = 0,
+                          partition_id: int = 0) -> np.ndarray:
+    """(1, F) feature row for a single GEMM instance."""
+    return build_features(np.array([m]), np.array([k]), np.array([n]),
+                          np.array([n_workers]), np.array([tile_id]),
+                          np.array([partition_id]))

@@ -1,0 +1,127 @@
+"""Scrambled Halton sequence sampling of the GEMM input domain.
+
+The paper (§IV-B) samples (m, k, n) with a *scrambled* Halton sequence so
+that the training set is low-discrepancy across the whole domain,
+including slim/fat and tiny/huge matrices.  Scrambling (random digit
+permutations, Mascagni & Chi 2004) breaks the inter-dimensional
+correlation plain Halton suffers from in higher bases.
+
+Deviation from the paper recorded in DESIGN.md: the paper lists bases
+(2, 3, 4); base 4 is not coprime with base 2 which destroys the
+low-discrepancy property the cited reference requires, so we use the
+first three primes (2, 3, 5).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "halton_sequence",
+    "scrambled_halton",
+    "sample_gemm_dims",
+    "gemm_bytes",
+]
+
+_DEFAULT_BASES = (2, 3, 5)
+
+
+def _digit_permutations(base: int, rng: np.random.Generator) -> np.ndarray:
+    """A random permutation of {0..base-1} fixing 0.
+
+    Fixing 0 keeps the radical-inverse map well defined (trailing zeros
+    must stay zeros, otherwise the sequence escapes [0, 1)).
+    """
+    perm = 1 + rng.permutation(base - 1)
+    return np.concatenate([[0], perm])
+
+
+def _radical_inverse(indices: np.ndarray, base: int,
+                     perm: np.ndarray | None) -> np.ndarray:
+    """Vectorised (scrambled) radical inverse of ``indices`` in ``base``."""
+    idx = indices.astype(np.int64).copy()
+    out = np.zeros(idx.shape, dtype=np.float64)
+    inv_base = 1.0 / base
+    factor = inv_base
+    while np.any(idx > 0):
+        digits = idx % base
+        if perm is not None:
+            digits = perm[digits]
+        out += digits * factor
+        idx //= base
+        factor *= inv_base
+    return out
+
+
+def halton_sequence(n: int, dims: int = 3, *, start: int = 1,
+                    bases: tuple[int, ...] | None = None) -> np.ndarray:
+    """Plain Halton points in [0, 1)^dims, shape (n, dims)."""
+    bases = bases or _DEFAULT_BASES
+    if dims > len(bases):
+        raise ValueError(f"need {dims} bases, have {len(bases)}")
+    indices = np.arange(start, start + n)
+    cols = [_radical_inverse(indices, bases[d], None) for d in range(dims)]
+    return np.stack(cols, axis=1)
+
+
+def scrambled_halton(n: int, dims: int = 3, *, seed: int = 0,
+                     start: int = 1,
+                     bases: tuple[int, ...] | None = None) -> np.ndarray:
+    """Scrambled Halton points in [0, 1)^dims, shape (n, dims)."""
+    bases = bases or _DEFAULT_BASES
+    if dims > len(bases):
+        raise ValueError(f"need {dims} bases, have {len(bases)}")
+    rng = np.random.default_rng(seed)
+    indices = np.arange(start, start + n)
+    cols = []
+    for d in range(dims):
+        perm = _digit_permutations(bases[d], rng)
+        cols.append(_radical_inverse(indices, bases[d], perm))
+    return np.stack(cols, axis=1)
+
+
+def gemm_bytes(m: np.ndarray, k: np.ndarray, n: np.ndarray,
+               dtype_bytes: int = 4) -> np.ndarray:
+    """Aggregate operand footprint: dtype_bytes * (mk + kn + mn)  (§IV-B)."""
+    m = np.asarray(m, dtype=np.int64)
+    k = np.asarray(k, dtype=np.int64)
+    n = np.asarray(n, dtype=np.int64)
+    return dtype_bytes * (m * k + k * n + m * n)
+
+
+def sample_gemm_dims(n_samples: int, *, mem_limit_bytes: int,
+                     dim_min: int = 8, dim_max: int = 65536,
+                     dtype_bytes: int = 4, seed: int = 0,
+                     log_space: bool = True) -> np.ndarray:
+    """Sample (m, k, n) triples under a memory budget (paper §IV-B).
+
+    Points are drawn from a scrambled Halton sequence, mapped to the
+    dimension range (log-uniformly by default — matrix dims span four
+    orders of magnitude), and rejected when the aggregate operand
+    footprint exceeds ``mem_limit_bytes``.  Rejection preserves the
+    low-discrepancy property inside the accepted region.
+
+    Returns an (n_samples, 3) int64 array.
+    """
+    accepted: list[np.ndarray] = []
+    start = 1
+    total = 0
+    lo, hi = np.log2(dim_min), np.log2(dim_max)
+    while total < n_samples:
+        batch = max(256, 2 * (n_samples - total))
+        u = scrambled_halton(batch, 3, seed=seed, start=start)
+        start += batch
+        if log_space:
+            dims = np.exp2(lo + u * (hi - lo))
+        else:
+            dims = dim_min + u * (dim_max - dim_min)
+        dims = np.maximum(dim_min, np.round(dims)).astype(np.int64)
+        keep = gemm_bytes(dims[:, 0], dims[:, 1], dims[:, 2],
+                          dtype_bytes) <= mem_limit_bytes
+        kept = dims[keep]
+        if kept.size:
+            accepted.append(kept)
+            total += len(kept)
+        if start > 10_000_000:  # pragma: no cover - domain misconfigured
+            raise RuntimeError("halton rejection sampling failed to fill")
+    return np.concatenate(accepted, axis=0)[:n_samples]

@@ -1,0 +1,367 @@
+"""ADSALA installation workflow (paper §III-B, Fig 2).
+
+    sample GEMM domain (scrambled Halton)
+      -> time every candidate worker config (separate "executions")
+      -> preprocess (YJ + standardise + LOF + correlation pruning)
+      -> CV hyper-tune every candidate model
+      -> measure per-model evaluation latency t_eval on this host
+      -> select by estimated speedup  s = t_orig / (t_ADSALA + t_eval)
+      -> persist two files: config.json + model.json (paper Fig 2)
+
+The installer returns an ``InstallReport`` whose rows are exactly the
+columns of the paper's Tables III/IV.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any
+
+import numpy as np
+
+from repro.core import costmodel
+from repro.core.costmodel import GemmConfig
+from repro.core.features import FEATURE_NAMES, build_features
+from repro.core.halton import sample_gemm_dims
+from repro.core.ml import grid_search, make_model, rmse
+from repro.core.ml.base import normalised_rmse, stratified_train_test_split
+from repro.core.ml.registry import default_param_grids, model_from_dict
+from repro.core.preprocessing import PreprocessPipeline
+from repro.core.timing import SimulatedBackend, TimingBackend
+
+__all__ = [
+    "GatheredData", "InstallConfig", "ModelReport", "InstallReport",
+    "gather_data", "install", "load_artifact", "default_config",
+    "DEFAULT_WORKER_CONFIG",
+]
+
+_PARTITIONS = ("M", "N", "K", "2D")
+
+#: The "use every core" default the paper benchmarks against: all chips,
+#: 2D sharding, mid-size tile.
+DEFAULT_WORKER_CONFIG = GemmConfig(n_chips=512, partition="2D", tile_id=3)
+
+
+@dataclasses.dataclass
+class InstallConfig:
+    n_samples: int = 400
+    mem_limit_mb: int = 500
+    dtype_bytes: int = 2
+    repeats: int = 3                      # paper: 10 iterations per input
+    max_chips: int = 512
+    tile_ids: tuple[int, ...] = (0, 1, 3, 5)
+    train_cfgs_per_dim: int = 12          # row subsample for training
+    models: tuple[str, ...] = (
+        "linear_regression", "elasticnet", "bayesian_regression",
+        "decision_tree", "random_forest", "adaboost", "xgboost",
+        "lightgbm")
+    grid_budget: str = "small"
+    cv_splits: int = 3
+    test_fraction: float = 0.3
+    seed: int = 0
+    #: uniform sampling of the (m,k,n) domain, as in the paper (Fig 9's
+    #: contour-bounded domain); log-space is an opt-in alternative that
+    #: emphasises small GEMMs.
+    log_space: bool = False
+    dim_min: int = 8
+    dim_max: int = 65536
+    #: steady-state fraction of GEMM calls whose dims hit the tuner's
+    #: memo cache (paper §III-C: "GEMM usage is within a loop with the
+    #: same GEMM input size").  Selection uses the warm estimate; the
+    #: cold (hit rate 0) estimate is reported alongside.
+    cache_hit_rate: float = 0.9
+    default_config: GemmConfig = DEFAULT_WORKER_CONFIG
+
+    @property
+    def mem_limit_bytes(self) -> int:
+        return self.mem_limit_mb * 2**20
+
+
+def default_config(**overrides: Any) -> InstallConfig:
+    return dataclasses.replace(InstallConfig(), **overrides)
+
+
+@dataclasses.dataclass
+class GatheredData:
+    """Long-format timing table + the full (dim x cfg) matrix."""
+
+    dims: np.ndarray                       # (D, 3) int64
+    cfgs: list[GemmConfig]                 # C candidates
+    times: np.ndarray                      # (D, C) median seconds
+
+    def optimal_worker_index(self) -> np.ndarray:
+        return np.argmin(self.times, axis=1)
+
+    def to_rows(self, *, per_dim: int | None = None, seed: int = 0
+                ) -> tuple[np.ndarray, np.ndarray]:
+        """(X_features, y_log_time) long format, optionally subsampling
+        configs per dim (the paper separates runs per thread count)."""
+        rng = np.random.default_rng(seed)
+        D, C = self.times.shape
+        rows_X, rows_y = [], []
+        for i in range(D):
+            js = (np.arange(C) if per_dim is None or per_dim >= C
+                  else rng.choice(C, size=per_dim, replace=False))
+            m, k, n = self.dims[i]
+            for j in js:
+                cfg = self.cfgs[j]
+                rows_X.append((m, k, n, cfg.n_chips, cfg.tile_id,
+                               _PARTITIONS.index(cfg.partition)))
+                rows_y.append(self.times[i, j])
+        raw = np.asarray(rows_X, dtype=np.float64)
+        X = build_features(raw[:, 0], raw[:, 1], raw[:, 2], raw[:, 3],
+                           raw[:, 4], raw[:, 5])
+        y = np.log(np.maximum(np.asarray(rows_y), 1e-12))
+        return X, y
+
+    def save(self, path: str) -> None:
+        np.savez_compressed(
+            path, dims=self.dims, times=self.times,
+            cfg_chips=np.asarray([c.n_chips for c in self.cfgs]),
+            cfg_tile=np.asarray([c.tile_id for c in self.cfgs]),
+            cfg_part=np.asarray(
+                [_PARTITIONS.index(c.partition) for c in self.cfgs]))
+
+    @classmethod
+    def load(cls, path: str) -> "GatheredData":
+        z = np.load(path)
+        cfgs = [GemmConfig(int(c), _PARTITIONS[int(p)], int(t))
+                for c, t, p in zip(z["cfg_chips"], z["cfg_tile"],
+                                   z["cfg_part"])]
+        return cls(dims=z["dims"], cfgs=cfgs, times=z["times"])
+
+
+def gather_data(backend: TimingBackend, cfg: InstallConfig) -> GatheredData:
+    """Paper Fig 2 'data gathering': Halton-sample the domain, run each
+    (input x worker-config) ``repeats`` times, keep the median."""
+    dims = sample_gemm_dims(
+        cfg.n_samples, mem_limit_bytes=cfg.mem_limit_bytes,
+        dtype_bytes=cfg.dtype_bytes, seed=cfg.seed,
+        dim_min=cfg.dim_min, dim_max=cfg.dim_max, log_space=cfg.log_space)
+    cfgs = costmodel.candidate_configs(cfg.max_chips, tiles=cfg.tile_ids)
+    times = np.empty((len(dims), len(cfgs)))
+    for i, (m, k, n) in enumerate(dims):
+        for j, c in enumerate(cfgs):
+            reps = [backend.time_gemm(int(m), int(k), int(n), c)
+                    for _ in range(cfg.repeats)]
+            times[i, j] = float(np.median(reps))
+    return GatheredData(dims=dims, cfgs=cfgs, times=times)
+
+
+@dataclasses.dataclass
+class ModelReport:
+    """One row of the paper's Tables III/IV."""
+
+    name: str
+    params: dict[str, Any]
+    test_rmse: float
+    normalised_rmse: float
+    eval_time_us: float
+    ideal_mean_speedup: float
+    ideal_aggregate_speedup: float
+    est_mean_speedup: float          # cold: every call pays t_eval
+    est_aggregate_speedup: float
+    warm_est_mean_speedup: float     # steady state with memo cache
+    warm_est_aggregate_speedup: float
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class InstallReport:
+    selected: str
+    reports: list[ModelReport]
+    artifact_dir: str | None
+
+    def table(self) -> str:
+        hdr = (f"{'model':20s} {'nrmse':>7s} {'ideal_mean':>10s} "
+               f"{'ideal_agg':>9s} {'t_eval_us':>9s} {'est_mean':>8s} "
+               f"{'est_agg':>8s} {'warm_mean':>9s} {'warm_agg':>8s}")
+        lines = [hdr]
+        for r in self.reports:
+            lines.append(
+                f"{r.name:20s} {r.normalised_rmse:7.3f} "
+                f"{r.ideal_mean_speedup:10.3f} "
+                f"{r.ideal_aggregate_speedup:9.3f} {r.eval_time_us:9.1f} "
+                f"{r.est_mean_speedup:8.3f} {r.est_aggregate_speedup:8.3f} "
+                f"{r.warm_est_mean_speedup:9.3f} "
+                f"{r.warm_est_aggregate_speedup:8.3f}")
+        lines.append(f"selected: {self.selected}")
+        return "\n".join(lines)
+
+
+def _measure_eval_time(model: Any, pipe: PreprocessPipeline,
+                       n_candidates: int, *, iters: int = 30) -> float:
+    """Latency of one runtime tuner evaluation (features -> argmin), in µs.
+
+    This is the paper's t_eval: it charges the *whole* per-call path —
+    feature build, preprocessing transform and batched model prediction
+    over the candidate set.
+    """
+    Xq = build_features(
+        np.full(n_candidates, 512.0), np.full(n_candidates, 512.0),
+        np.full(n_candidates, 512.0),
+        np.maximum(1, np.arange(n_candidates) % 9),
+        np.arange(n_candidates) % 8, np.arange(n_candidates) % 4)
+    # warmup
+    model.predict(pipe.transform(Xq))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        model.predict(pipe.transform(Xq))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _speedups(model: Any, pipe: PreprocessPipeline, data: GatheredData,
+              test_dims_idx: np.ndarray, cfg: InstallConfig,
+              eval_time_s: float
+              ) -> tuple[float, float, float, float, float, float]:
+    """Ideal / cold-estimated / warm-estimated mean + aggregate speedups
+    over held-out GEMM dims (paper §IV-D)."""
+    cfgs = data.cfgs
+    C = len(cfgs)
+    chips = np.asarray([c.n_chips for c in cfgs], dtype=np.float64)
+    tiles = np.asarray([c.tile_id for c in cfgs], dtype=np.float64)
+    parts = np.asarray([_PARTITIONS.index(c.partition) for c in cfgs],
+                       dtype=np.float64)
+    try:
+        j_default = cfgs.index(cfg.default_config)
+    except ValueError:
+        j_default = int(np.argmax(chips))
+    t_orig = data.times[test_dims_idx, j_default]
+    t_chosen = np.empty(len(test_dims_idx))
+    for out_i, i in enumerate(test_dims_idx):
+        m, k, n = data.dims[i]
+        X = build_features(np.full(C, float(m)), np.full(C, float(k)),
+                           np.full(C, float(n)), chips, tiles, parts)
+        pred = model.predict(pipe.transform(X))
+        t_chosen[out_i] = data.times[i, int(np.argmin(pred))]
+    ideal = t_orig / np.maximum(t_chosen, 1e-12)
+    est = t_orig / np.maximum(t_chosen + eval_time_s, 1e-12)
+    warm_eval = (1.0 - cfg.cache_hit_rate) * eval_time_s
+    warm = t_orig / np.maximum(t_chosen + warm_eval, 1e-12)
+    return (float(ideal.mean()),
+            float(t_orig.sum() / max(t_chosen.sum(), 1e-12)),
+            float(est.mean()),
+            float(t_orig.sum() / max((t_chosen + eval_time_s).sum(), 1e-12)),
+            float(warm.mean()),
+            float(t_orig.sum() / max((t_chosen + warm_eval).sum(), 1e-12)))
+
+
+def install(backend: TimingBackend | None = None,
+            cfg: InstallConfig | None = None, *,
+            artifact_dir: str | None = None,
+            data: GatheredData | None = None,
+            verbose: bool = False) -> InstallReport:
+    """Run the full installation workflow; optionally persist the artifact."""
+    cfg = cfg or InstallConfig()
+    backend = backend or SimulatedBackend(seed=cfg.seed)
+    if data is None:
+        data = gather_data(backend, cfg)
+
+    # --- split on GEMM *inputs* (not rows) so test dims are unseen --------
+    D = len(data.dims)
+    dim_idx = np.arange(D)
+    log_best = np.log(np.maximum(data.times.min(axis=1), 1e-12))
+    _, test_dim_idx, _, _ = stratified_train_test_split(
+        dim_idx[:, None], log_best, test_fraction=cfg.test_fraction,
+        seed=cfg.seed)
+    test_dims = set(test_dim_idx[:, 0].astype(int).tolist())
+    train_mask = np.asarray([i not in test_dims for i in range(D)])
+
+    train_data = GatheredData(dims=data.dims[train_mask], cfgs=data.cfgs,
+                              times=data.times[train_mask])
+    test_idx = np.asarray(sorted(test_dims), dtype=int)
+
+    X_train, y_train = train_data.to_rows(per_dim=cfg.train_cfgs_per_dim,
+                                          seed=cfg.seed)
+    test_rows = GatheredData(dims=data.dims[test_idx], cfgs=data.cfgs,
+                             times=data.times[test_idx])
+    X_test, y_test = test_rows.to_rows(per_dim=cfg.train_cfgs_per_dim,
+                                       seed=cfg.seed + 1)
+
+    pipe = PreprocessPipeline()
+    Xt_train, yt_train = pipe.fit_transform(X_train, y_train)
+    Xt_test = pipe.transform(X_test)
+
+    grids = default_param_grids(cfg.grid_budget)
+    reports: list[ModelReport] = []
+    fitted: dict[str, Any] = {}
+    for name in cfg.models:
+        grid = grids.get(name, {})
+        if grid:
+            best_params, _ = grid_search(
+                lambda **p: make_model(name, **p), grid, Xt_train, yt_train,
+                n_splits=cfg.cv_splits, seed=cfg.seed)
+        else:
+            best_params = {}
+        model = make_model(name, **best_params)
+        model.fit(Xt_train, yt_train)
+        fitted[name] = model
+        test_pred = model.predict(Xt_test)
+        t_eval_us = _measure_eval_time(model, pipe, len(data.cfgs))
+        (ideal_mean, ideal_agg, est_mean, est_agg,
+         warm_mean, warm_agg) = _speedups(
+            model, pipe, data, test_idx, cfg, t_eval_us * 1e-6)
+        reports.append(ModelReport(
+            name=name, params=best_params,
+            test_rmse=rmse(y_test, test_pred),
+            normalised_rmse=normalised_rmse(y_test, test_pred),
+            eval_time_us=t_eval_us,
+            ideal_mean_speedup=ideal_mean,
+            ideal_aggregate_speedup=ideal_agg,
+            est_mean_speedup=est_mean,
+            est_aggregate_speedup=est_agg,
+            warm_est_mean_speedup=warm_mean,
+            warm_est_aggregate_speedup=warm_agg))
+        if verbose:
+            print(f"[install] {name}: nrmse={reports[-1].normalised_rmse:.3f}"
+                  f" est_mean={est_mean:.3f} warm={warm_mean:.3f}"
+                  f" t_eval={t_eval_us:.0f}us")
+
+    selected = max(reports, key=lambda r: r.warm_est_mean_speedup).name
+    report = InstallReport(selected=selected, reports=reports,
+                           artifact_dir=artifact_dir)
+
+    if artifact_dir is not None:
+        os.makedirs(artifact_dir, exist_ok=True)
+        # paper Fig 2: "two files ... the configurations together with the
+        # production-ready ML model"
+        with open(os.path.join(artifact_dir, "config.json"), "w") as f:
+            json.dump({
+                "feature_names": FEATURE_NAMES,
+                "preprocess": pipe.to_dict(),
+                "candidates": [
+                    {"n_chips": c.n_chips, "partition": c.partition,
+                     "tile_id": c.tile_id} for c in data.cfgs],
+                "default_config": {
+                    "n_chips": cfg.default_config.n_chips,
+                    "partition": cfg.default_config.partition,
+                    "tile_id": cfg.default_config.tile_id},
+                "install": {
+                    "n_samples": cfg.n_samples,
+                    "mem_limit_mb": cfg.mem_limit_mb,
+                    "dtype_bytes": cfg.dtype_bytes,
+                    "repeats": cfg.repeats, "seed": cfg.seed},
+                "selection": [r.to_dict() for r in reports],
+                "selected": selected,
+            }, f, indent=1)
+        with open(os.path.join(artifact_dir, "model.json"), "w") as f:
+            json.dump(fitted[selected].to_dict(), f)
+    return report
+
+
+def load_artifact(artifact_dir: str) -> tuple[Any, PreprocessPipeline,
+                                              list[GemmConfig], dict]:
+    """Load the two installation files back (paper Fig 3, left box)."""
+    with open(os.path.join(artifact_dir, "config.json")) as f:
+        config = json.load(f)
+    with open(os.path.join(artifact_dir, "model.json")) as f:
+        model = model_from_dict(json.load(f))
+    pipe = PreprocessPipeline.from_dict(config["preprocess"])
+    cands = [GemmConfig(d["n_chips"], d["partition"], d["tile_id"])
+             for d in config["candidates"]]
+    return model, pipe, cands, config

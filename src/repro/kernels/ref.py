@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["matmul_ref", "grouped_matmul_ref", "flash_attention_ref"]
+
+
+def matmul_ref(a: jax.Array, b: jax.Array,
+               out_dtype: jnp.dtype | None = None) -> jax.Array:
+    out = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    return out.astype(out_dtype or a.dtype)
+
+
+def grouped_matmul_ref(x: jax.Array, w: jax.Array,
+                       out_dtype: jnp.dtype | None = None) -> jax.Array:
+    out = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    return out.astype(out_dtype or x.dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int | None = None,
+                        sm_scale: float | None = None) -> jax.Array:
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    sm_scale = sm_scale if sm_scale is not None else float(d) ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    q_ids = jnp.arange(sq)[:, None]
+    kv_ids = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= kv_ids <= q_ids
+    if window is not None:
+        mask &= kv_ids > q_ids - window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — required by the dry-run, whose XLA_FLAGS must
+be set before the first jax initialisation.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh", "dp_axes", "tp_axis"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips).
+
+    ADSALA_TP overrides the model-axis degree (total chips preserved) —
+    the §Perf hillclimb knob for shifting TP<->DP balance.
+    """
+    import os
+    tp = int(os.environ.get("ADSALA_TP", "16"))
+    if multi_pod:
+        shape = (2, 512 // (2 * tp), tp)
+        axes = ("pod", "data", "model")
+    else:
+        shape = (256 // tp, tp)
+        axes = ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """The data-parallel axes of a mesh (everything except 'model')."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def tp_axis(mesh) -> str:
+    return "model"

@@ -1,0 +1,8 @@
+"""Model zoo: shared layer library + 10 assigned architectures."""
+
+from repro.models.config import ArchConfig, SHAPES, ShapeSpec, shape_for
+from repro.models.transformer import LM, Ctx, build_lm
+from repro.models.encdec import EncDecLM, build_encdec
+
+__all__ = ["ArchConfig", "SHAPES", "ShapeSpec", "shape_for",
+           "LM", "Ctx", "build_lm", "EncDecLM", "build_encdec"]

@@ -1,0 +1,82 @@
+"""Parameter definition + initialisation + logical-axis sharding.
+
+Every model declares its parameters as a pytree of :class:`ParamDef`
+(shape, init, *logical* axes).  Logical axes ("vocab", "ff", "heads",
+"experts", …) are mapped to physical mesh axes by the distribution
+layer's rule table — the same pattern MaxText/T5X use, so sharding is a
+config concern, not a model concern.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+__all__ = ["ParamDef", "init_params", "param_specs", "count_params"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]          # logical axis per dim
+    init: str = "normal"                  # normal | zeros | ones
+    scale: float | None = None            # None -> 1/sqrt(fan_in)
+
+    def __post_init__(self) -> None:
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes}")
+
+
+def _init_one(d: ParamDef, key: jax.Array, dtype: jnp.dtype) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+    scale = d.scale if d.scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, d.shape, jnp.float32) * scale
+            ).astype(dtype)
+
+
+def init_params(defs: Any, rng: jax.Array,
+                dtype: jnp.dtype = jnp.float32) -> Any:
+    """Materialise a ParamDef pytree into arrays (deterministic per path)."""
+    leaves, treedef = jax.tree.flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(rng, len(leaves))
+    arrays = [_init_one(d, k, dtype) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrays)
+
+
+def abstract_params(defs: Any, dtype: jnp.dtype = jnp.float32) -> Any:
+    """ShapeDtypeStruct pytree (for .lower() without allocation)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs,
+        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def param_specs(defs: Any, rules: dict[str, Any]) -> Any:
+    """Map logical axes -> PartitionSpec via the rule table.
+
+    ``rules`` maps logical axis name -> mesh axis (str | tuple | None).
+    Unlisted logical axes are replicated.
+    """
+    def one(d: ParamDef) -> PartitionSpec:
+        return PartitionSpec(*(rules.get(a) if a else None for a in d.axes))
+    return jax.tree.map(one, defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def count_params(defs: Any) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    total = 0
+    for d in leaves:
+        n = 1
+        for s in d.shape:
+            n *= s
+        total += n
+    return total

@@ -1,0 +1,139 @@
+"""RecurrentGemma blocks: RG-LRU recurrence + temporal conv (Griffin,
+arXiv:2402.19427).
+
+The RG-LRU is a real-valued gated linear recurrence
+
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+    a_t = exp(-c * softplus(Λ) * sigmoid(r_t))
+
+It is linear in h, so training/prefill uses ``jax.lax.associative_scan``
+(log-depth — the TPU translation of the paper's sequential CUDA scan),
+and decode carries a single (B, W) state.  The recurrent block is
+conv1d(4) -> RG-LRU in a gated (GeGLU-style) wrapper, as in Griffin.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import linear
+from repro.models.params import ParamDef
+
+__all__ = ["RGLRUSpec", "rglru_block_defs", "rglru_block_train",
+           "rglru_block_decode", "RGLRUState", "init_rglru_state"]
+
+_C = 8.0  # Griffin's fixed recurrence sharpness
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUSpec:
+    d_model: int
+    width: int            # lru_width
+    conv_width: int = 4
+
+
+def rglru_block_defs(s: RGLRUSpec) -> dict:
+    d, w = s.d_model, s.width
+    return {
+        "wx": ParamDef((d, w), ("embed", "ff")),        # recurrent branch
+        "wy": ParamDef((d, w), ("embed", "ff")),        # gate branch
+        "conv_w": ParamDef((s.conv_width, w), (None, "ff"), scale=0.5),
+        "conv_b": ParamDef((w,), ("ff",), init="zeros"),
+        "lam": ParamDef((w,), ("ff",), init="normal", scale=0.5),
+        "w_input_gate": ParamDef((w, w), ("ff", None), scale=0.01),
+        "b_input_gate": ParamDef((w,), (None,), init="zeros"),
+        "w_rec_gate": ParamDef((w, w), ("ff", None), scale=0.01),
+        "b_rec_gate": ParamDef((w,), (None,), init="zeros"),
+        "wo": ParamDef((w, d), ("ff", "embed")),
+    }
+
+
+def _gates(p: dict, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """log(a_t) and input gate i_t, both (..., W) in fp32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_rec_gate"].astype(jnp.float32)
+                       + p["b_rec_gate"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ p["w_input_gate"].astype(jnp.float32)
+                       + p["b_input_gate"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    return log_a, i
+
+
+def _conv1d(p: dict, x: jax.Array, state: jax.Array | None
+            ) -> tuple[jax.Array, jax.Array]:
+    """Causal depthwise conv along seq; x (B, S, W).
+
+    Returns (out, new_state) where state holds the last (conv_width - 1)
+    inputs for decode continuation.
+    """
+    cw = p["conv_w"].shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xx = jnp.concatenate([state, x], axis=1)
+    out = sum(xx[:, i:i + x.shape[1]] * p["conv_w"][i][None, None]
+              for i in range(cw))
+    return out + p["conv_b"], xx[:, -(cw - 1):]
+
+
+def _rglru_scan(log_a: jax.Array, gx: jax.Array,
+                h0: jax.Array | None) -> jax.Array:
+    """Associative scan of h_t = a_t h_{t-1} + b_t over axis 1 (seq)."""
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gx
+    if h0 is not None:
+        b = b.at[:, 0].add(jnp.exp(log_a[:, 0]) * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_block_train(p: dict, x: jax.Array
+                      ) -> tuple[jax.Array, "RGLRUState"]:
+    """Full-sequence recurrent block: x (B, S, D) -> (out, final state)."""
+    gate = jax.nn.gelu(linear(x, p["wy"]))
+    u = linear(x, p["wx"])
+    u, conv_state = _conv1d(p, u, None)
+    log_a, i_gate = _gates(p, u)
+    h = _rglru_scan(log_a, i_gate * u.astype(jnp.float32), None)
+    out = linear((h.astype(x.dtype) * gate), p["wo"])
+    return out, RGLRUState(h[:, -1], conv_state)
+
+
+@dataclasses.dataclass
+class RGLRUState:
+    h: jax.Array          # (B, W) recurrence state, fp32
+    conv: jax.Array       # (B, conv_width - 1, W)
+
+
+jax.tree_util.register_dataclass(
+    RGLRUState, data_fields=["h", "conv"], meta_fields=[])
+
+
+def init_rglru_state(batch: int, s: RGLRUSpec,
+                     dtype: jnp.dtype) -> RGLRUState:
+    return RGLRUState(
+        jnp.zeros((batch, s.width), jnp.float32),
+        jnp.zeros((batch, s.conv_width - 1, s.width), dtype))
+
+
+def rglru_block_decode(p: dict, x: jax.Array, state: RGLRUState
+                       ) -> tuple[jax.Array, RGLRUState]:
+    """One-token step: x (B, 1, D)."""
+    gate = jax.nn.gelu(linear(x, p["wy"]))
+    u = linear(x, p["wx"])
+    u, conv_state = _conv1d(p, u, state.conv)
+    log_a, i_gate = _gates(p, u[:, 0])
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i_gate * u[:, 0].astype(jnp.float32))
+    h = a * state.h + b
+    out = linear((h[:, None].astype(x.dtype) * gate), p["wo"])
+    return out, RGLRUState(h, conv_state)

@@ -1,0 +1,279 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM
+(scalar memory with exponential gating).
+
+TPU adaptation (DESIGN.md): the paper's CUDA kernels become
+  * mLSTM — chunked linear-attention form: inter-chunk state (B, H, Dh,
+    Dh) carried by ``lax.scan`` over sequence chunks, intra-chunk work
+    fully parallel on the MXU.  O(S·Dh²) like the recurrent form but
+    matmul-shaped.
+  * sLSTM — plain ``lax.scan`` over time (the recurrence is
+    non-associative because of the max-stabiliser state), vector ops
+    only.
+
+Both carry exact recurrent state for decode, which is what makes
+xlstm-125m eligible for the long_500k shape.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import linear, rmsnorm
+from repro.models.params import ParamDef
+
+__all__ = [
+    "XLSTMSpec", "mlstm_defs", "mlstm_train", "mlstm_decode",
+    "slstm_defs", "slstm_train", "slstm_decode",
+    "MLSTMState", "SLSTMState", "init_mlstm_state", "init_slstm_state",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMSpec:
+    d_model: int
+    n_heads: int
+    proj_factor: float = 2.0      # mLSTM up-projection
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return int(self.d_model * self.proj_factor)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_defs(s: XLSTMSpec) -> dict:
+    d, di = s.d_model, s.d_inner
+    return {
+        "w_up": ParamDef((d, 2 * di), ("embed", "ff")),
+        "wq": ParamDef((di, di), ("ff", None)),
+        "wk": ParamDef((di, di), ("ff", None)),
+        "wv": ParamDef((di, di), ("ff", None)),
+        "w_igate": ParamDef((di, s.n_heads), ("ff", None), scale=0.01),
+        "b_igate": ParamDef((s.n_heads,), (None,), init="zeros"),
+        "w_fgate": ParamDef((di, s.n_heads), ("ff", None), scale=0.01),
+        "b_fgate": ParamDef((s.n_heads,), (None,), init="ones"),
+        "norm": ParamDef((di,), (None,), init="ones"),
+        "w_down": ParamDef((di, d), ("ff", "embed")),
+    }
+
+
+@dataclasses.dataclass
+class MLSTMState:
+    c: jax.Array    # (B, H, Dh, Dh) matrix memory, fp32
+    n: jax.Array    # (B, H, Dh) normaliser
+    m: jax.Array    # (B, H) max-stabiliser (log space)
+
+
+jax.tree_util.register_dataclass(
+    MLSTMState, data_fields=["c", "n", "m"], meta_fields=[])
+
+
+def init_mlstm_state(batch: int, s: XLSTMSpec, dtype=jnp.float32
+                     ) -> MLSTMState:
+    h, dh = s.n_heads, s.head_dim
+    return MLSTMState(jnp.zeros((batch, h, dh, dh), jnp.float32),
+                      jnp.zeros((batch, h, dh), jnp.float32),
+                      jnp.full((batch, h), -1e30, jnp.float32))
+
+
+def _mlstm_qkv(p: dict, x: jax.Array, s: XLSTMSpec):
+    """x (B, S, D) -> q/k/v (B, S, H, Dh), gates (B, S, H), gate z."""
+    b, sl, _ = x.shape
+    up = linear(x, p["w_up"])
+    u, z = jnp.split(up, 2, axis=-1)
+    q = linear(u, p["wq"]).reshape(b, sl, s.n_heads, s.head_dim)
+    k = linear(u, p["wk"]).reshape(b, sl, s.n_heads, s.head_dim) \
+        * (s.head_dim ** -0.5)
+    v = linear(u, p["wv"]).reshape(b, sl, s.n_heads, s.head_dim)
+    ig = (jnp.einsum("bsd,dh->bsh", u, p["w_igate"])
+          + p["b_igate"]).astype(jnp.float32)
+    fg = (jnp.einsum("bsd,dh->bsh", u, p["w_fgate"])
+          + p["b_fgate"]).astype(jnp.float32)
+    return q, k, v, ig, fg, z
+
+
+def mlstm_train(p: dict, x: jax.Array, s: XLSTMSpec
+                ) -> tuple[jax.Array, "MLSTMState"]:
+    """Chunked parallel mLSTM over the full sequence.
+
+    Returns (out, final state) — the state seeds decode.
+    """
+    b, sl, _ = x.shape
+    q, k, v, ig, fg, z = _mlstm_qkv(p, x, s)
+    ch = min(s.chunk, sl)
+    nc = -(-sl // ch)
+    pad = nc * ch - sl
+
+    def pad_t(t):
+        return jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+
+    # (nc, B, ch, ...)
+    qc, kc, vc = (pad_t(t).reshape(b, nc, ch, s.n_heads, s.head_dim)
+                  .transpose(1, 0, 2, 3, 4) for t in (q, k, v))
+    igc = pad_t(ig).reshape(b, nc, ch, s.n_heads).transpose(1, 0, 2, 3)
+    fgc = pad_t(fg).reshape(b, nc, ch, s.n_heads).transpose(1, 0, 2, 3)
+
+    init = init_mlstm_state(b, s)
+
+    def step(state, inp):
+        qi, ki, vi, igi, fgi = inp          # (B, ch, H, ...)
+        logf = jax.nn.log_sigmoid(fgi)      # (B, ch, H)
+        cum = jnp.cumsum(logf, axis=1)      # inclusive prefix of log-forgets
+        total = cum[:, -1]                  # (B, H)
+        # per-position stabiliser, matching the step recurrence
+        #   m_t = max(m_{t-1} + logf_t, ig_t)  =>  m_t = u_t + cum_t with
+        #   u_t = max(m_0, cummax_{t'<=t}(ig_{t'} - cum_{t'}))
+        u = jnp.maximum(state.m[:, None],
+                        jax.lax.cummax(igi - cum, axis=1))   # (B, ch, H)
+        m_pos = u + cum
+        m_last = m_pos[:, -1]
+        # intra-chunk decay: D[t, t'] = exp(cum_t - cum_t' + ig_t' - m_t)
+        logd = (cum[:, :, None] - cum[:, None, :]
+                + igi[:, None, :])          # (B, t, t', H)
+        t_ids = jnp.arange(ch)
+        causal = t_ids[:, None] >= t_ids[None, :]
+        logd = jnp.where(causal[None, :, :, None], logd, -jnp.inf)
+        d = jnp.exp(logd - m_pos[:, :, None])
+        sim = jnp.einsum("bthd,bshd->btsh", qi.astype(jnp.float32),
+                         ki.astype(jnp.float32))
+        w = sim * d
+        intra = jnp.einsum("btsh,bshd->bthd", w, vi.astype(jnp.float32))
+        norm_intra = jnp.sum(w, axis=2)                      # (B, t, H)
+        # inter-chunk contribution: q_t against C_0, decayed to position t
+        qdec = jnp.exp(cum + state.m[:, None] - m_pos)       # (B, ch, H)
+        inter = jnp.einsum("bthd,bhde,bth->bthe",
+                           qi.astype(jnp.float32), state.c, qdec)
+        norm_inter = jnp.einsum("bthd,bhd,bth->bth",
+                                qi.astype(jnp.float32), state.n, qdec)
+        num = intra + inter
+        den = jnp.abs(norm_intra + norm_inter)
+        out = num / jnp.maximum(den, 1.0)[..., None]
+        # state update to the chunk end (stabilised by m_last)
+        decay = jnp.exp(state.m + total - m_last)            # (B, H)
+        kdec = jnp.exp(igi + total[:, None] - cum - m_last[:, None])
+        c_new = state.c * decay[..., None, None] + jnp.einsum(
+            "bthd,bthe,bth->bhde", ki.astype(jnp.float32),
+            vi.astype(jnp.float32), kdec)
+        n_new = state.n * decay[..., None] + jnp.einsum(
+            "bthd,bth->bhd", ki.astype(jnp.float32), kdec)
+        return MLSTMState(c_new, n_new, m_last), out
+
+    final, outs = jax.lax.scan(step, init, (qc, kc, vc, igc, fgc))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, nc * ch, s.d_inner)
+    out = out[:, :sl].astype(x.dtype)
+    out = rmsnorm(out, p["norm"]) * jax.nn.silu(z)
+    return linear(out, p["w_down"]), final
+
+
+def mlstm_decode(p: dict, x: jax.Array, s: XLSTMSpec, state: MLSTMState
+                 ) -> tuple[jax.Array, MLSTMState]:
+    """One-token mLSTM step; x (B, 1, D)."""
+    b = x.shape[0]
+    q, k, v, ig, fg, z = _mlstm_qkv(p, x, s)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]      # (B, H, Dh)
+    ig, fg = ig[:, 0], fg[:, 0]              # (B, H)
+    logf = jax.nn.log_sigmoid(fg)
+    m_new = jnp.maximum(state.m + logf, ig)
+    decay = jnp.exp(state.m + logf - m_new)
+    inject = jnp.exp(ig - m_new)
+    kf, vf, qf = (t.astype(jnp.float32) for t in (k, v, q))
+    c_new = state.c * decay[..., None, None] \
+        + inject[..., None, None] * kf[..., :, None] * vf[..., None, :]
+    n_new = state.n * decay[..., None] + inject[..., None] * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, c_new)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n_new))
+    out = (num / jnp.maximum(den, 1.0)[..., None]).reshape(b, 1, s.d_inner)
+    out = rmsnorm(out.astype(x.dtype), p["norm"]) * jax.nn.silu(z)
+    return linear(out, p["w_down"]), MLSTMState(c_new, n_new, m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_defs(s: XLSTMSpec) -> dict:
+    d = s.d_model
+    return {
+        # z, i, f, o projections (input + recurrent)
+        "w_in": ParamDef((d, 4 * d), ("embed", "ff")),
+        "w_rec": ParamDef((d, 4 * d), ("embed", "ff"), scale=0.01),
+        "b": ParamDef((4 * d,), ("ff",), init="zeros"),
+        "norm": ParamDef((d,), (None,), init="ones"),
+        "w_up": ParamDef((d, 2 * d), ("embed", "ff")),
+        "w_down": ParamDef((d, d), ("ff", "embed")),
+    }
+
+
+@dataclasses.dataclass
+class SLSTMState:
+    c: jax.Array    # (B, D) cell
+    n: jax.Array    # (B, D) normaliser
+    h: jax.Array    # (B, D) hidden
+    m: jax.Array    # (B, D) stabiliser
+
+
+jax.tree_util.register_dataclass(
+    SLSTMState, data_fields=["c", "n", "h", "m"], meta_fields=[])
+
+
+def init_slstm_state(batch: int, s: XLSTMSpec, dtype=jnp.float32
+                     ) -> SLSTMState:
+    d = s.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(z, z, z, jnp.full((batch, d), -1e30, jnp.float32))
+
+
+def _slstm_cell(p: dict, xt: jax.Array, st: SLSTMState
+                ) -> tuple[SLSTMState, jax.Array]:
+    """One sLSTM step; xt (B, D) fp32."""
+    d = xt.shape[-1]
+    pre = (xt @ p["w_in"].astype(jnp.float32)
+           + st.h @ p["w_rec"].astype(jnp.float32)
+           + p["b"].astype(jnp.float32))
+    z, i, f, o = jnp.split(pre, 4, axis=-1)
+    logf = jax.nn.log_sigmoid(f)
+    m_new = jnp.maximum(logf + st.m, i)
+    i_s = jnp.exp(i - m_new)
+    f_s = jnp.exp(logf + st.m - m_new)
+    c = f_s * st.c + i_s * jnp.tanh(z)
+    n = f_s * st.n + i_s
+    h = jax.nn.sigmoid(o) * c / jnp.maximum(n, 1.0)
+    return SLSTMState(c, n, h, m_new), h
+
+
+def slstm_train(p: dict, x: jax.Array, s: XLSTMSpec
+                ) -> tuple[jax.Array, "SLSTMState"]:
+    """Sequential scan over time (non-associative recurrence)."""
+    b, sl, d = x.shape
+    xf = x.astype(jnp.float32)
+
+    def step(st, xt):
+        st2, h = _slstm_cell(p, xt, st)
+        return st2, h
+
+    final, hs = jax.lax.scan(step, init_slstm_state(b, s),
+                             xf.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2).astype(x.dtype)
+    h = rmsnorm(h, p["norm"])
+    up = linear(h, p["w_up"])
+    a, g = jnp.split(up, 2, axis=-1)
+    return linear(a * jax.nn.gelu(g), p["w_down"]), final
+
+
+def slstm_decode(p: dict, x: jax.Array, s: XLSTMSpec, state: SLSTMState
+                 ) -> tuple[jax.Array, SLSTMState]:
+    st2, h = _slstm_cell(p, x[:, 0].astype(jnp.float32), state)
+    h = rmsnorm(h[:, None].astype(x.dtype), p["norm"])
+    up = linear(h, p["w_up"])
+    a, g = jnp.split(up, 2, axis=-1)
+    return linear(a * jax.nn.gelu(g), p["w_down"]), st2

@@ -1,0 +1,12 @@
+from repro.roofline.analytic import (
+    RooflineTerms,
+    analytic_collective_bytes,
+    analytic_hbm_bytes,
+    fwd_flops,
+    roofline_for_cell,
+    step_flops,
+)
+
+__all__ = ["fwd_flops", "step_flops", "analytic_hbm_bytes",
+           "analytic_collective_bytes", "roofline_for_cell",
+           "RooflineTerms"]

@@ -1,0 +1,110 @@
+"""Serving-step builders: prefill and single-token decode, mesh-aware.
+
+``serve_step`` for the decode shapes lowers decode (one new token against
+a seq_len KV cache), NOT train, per the assignment.  Cache sharding uses
+dist.sharding.auto_spec (batch over data axes, largest divisible dim —
+the cache sequence/width dim — over 'model').
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import auto_spec, batch_specs, partition_params
+from repro.models.config import ArchConfig, ShapeSpec
+from repro.train.step import make_ctx
+
+__all__ = ["build_prefill", "build_decode", "prefill_batch_sds",
+           "decode_inputs_sds", "cache_specs", "cache_sds"]
+
+
+def prefill_batch_sds(cfg: ArchConfig, shape: ShapeSpec,
+                      dtype=jnp.bfloat16) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    sds = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.family == "audio":
+        sds["audio_emb"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_len, cfg.d_model), dtype)
+    return sds
+
+
+def cache_sds(model, cfg: ArchConfig, shape: ShapeSpec,
+              dtype=jnp.bfloat16) -> Any:
+    """Abstract decode cache via eval_shape (no allocation)."""
+    ctx = make_ctx(None, "decode", cache_len=shape.seq_len)
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, ctx, dtype))
+
+
+def cache_specs(cache_abstract: Any, mesh) -> Any:
+    """Spec tree for decode caches.
+
+    Scan-segment caches are stacked (R, B, ...) — batch is dim 1;
+    prefix/suffix (and whisper's plain list) caches have batch at dim 0.
+    """
+    if isinstance(cache_abstract, dict) and "scan" in cache_abstract:
+        return {
+            "prefix": jax.tree.map(
+                lambda l: auto_spec(l.shape, mesh, batch_dim=0),
+                cache_abstract["prefix"]),
+            "scan": jax.tree.map(
+                lambda l: auto_spec(l.shape, mesh, batch_dim=1),
+                cache_abstract["scan"]),
+            "suffix": jax.tree.map(
+                lambda l: auto_spec(l.shape, mesh, batch_dim=0),
+                cache_abstract["suffix"]),
+        }
+    return jax.tree.map(lambda l: auto_spec(l.shape, mesh, batch_dim=0),
+                        cache_abstract)
+
+
+def decode_inputs_sds(model, cfg: ArchConfig, shape: ShapeSpec,
+                      dtype=jnp.bfloat16) -> tuple:
+    """(token, cache, pos) stand-ins for the decode serve_step."""
+    b = shape.global_batch
+    token = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    cache = cache_sds(model, cfg, shape, dtype)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return token, cache, pos
+
+
+def build_prefill(model, cfg: ArchConfig, shape: ShapeSpec, mesh):
+    """Returns (prefill_fn, param_specs, batch_specs, out description)."""
+    ctx = make_ctx(mesh, "prefill", cache_len=shape.seq_len, remat=False)
+
+    if cfg.family == "audio":
+        def prefill(params, batch):
+            return model.prefill(params, batch, ctx)
+    else:
+        def prefill(params, batch):
+            return model.prefill(params, batch["tokens"], ctx)
+
+    if mesh is None:
+        return prefill, None, None
+    return (prefill, partition_params(model, cfg, mesh),
+            batch_specs(cfg, shape, mesh))
+
+
+def build_decode(model, cfg: ArchConfig, shape: ShapeSpec, mesh):
+    """Returns (decode_fn, param_specs, (token, cache, pos) specs)."""
+    ctx = make_ctx(mesh, "decode", cache_len=shape.seq_len)
+
+    def decode(params, token, cache, pos):
+        return model.decode_step(params, token, cache, pos, ctx)
+
+    if mesh is None:
+        return decode, None, None
+    p_specs = partition_params(model, cfg, mesh)
+    cache_abs = cache_sds(model, cfg, shape)
+    c_specs = cache_specs(cache_abs, mesh)
+    b = shape.global_batch
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    t_spec = P(dp if b % dp_size == 0 else None, None)
+    return decode, p_specs, (t_spec, c_specs, P())

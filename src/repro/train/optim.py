@@ -1,0 +1,136 @@
+"""Optimizer: AdamW with global-norm clipping, cosine schedule, and
+optional int8 gradient compression with error feedback.
+
+Pure-pytree implementation (no optax in container).  The state layout
+{"params", "m", "v", "step"} mirrors the parameter tree so the sharding
+specs derive mechanically (dist.sharding.state_specs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "init_state", "adamw_update", "cosine_lr",
+           "clip_by_global_norm", "compress_int8", "decompress_int8",
+           "compressed_grads"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    #: int8 + error-feedback gradient compression (cross-replica traffic
+    #: reduction; the residual stays in the optimizer state)
+    compress: bool = False
+
+
+def cosine_lr(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+def init_state(params: Any, cfg: AdamWConfig | None = None) -> dict:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                         params)
+    state = {"params": params, "m": zeros,
+             "v": jax.tree.map(jnp.copy, zeros),
+             "step": jnp.zeros((), jnp.int32)}
+    if cfg is not None and cfg.compress:
+        state["ef"] = jax.tree.map(jnp.copy, zeros)
+    return state
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+# ---------------------------------------------------------------------------
+# int8 error-feedback compression
+# ---------------------------------------------------------------------------
+
+def compress_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8 quantisation; returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf)) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_grads(grads: Any, ef: Any) -> tuple[Any, Any]:
+    """Quantise grads with error feedback: g' = Q(g + ef); ef' = g+ef-g'.
+
+    In a multi-host deployment the int8 payload is what crosses the DCN
+    boundary; in-XLA the quantise/dequantise pair also bounds the bf16
+    all-reduce error accumulation.
+    """
+    def one(g, e):
+        tot = g.astype(jnp.float32) + e
+        q, s = compress_int8(tot)
+        deq = decompress_int8(q, s)
+        return deq.astype(g.dtype), tot - deq
+
+    flat = jax.tree.map(one, grads, ef)
+    new_g = jax.tree.map(lambda t: t[0], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_ef = jax.tree.map(lambda t: t[1], flat,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    return new_g, new_ef
+
+
+def adamw_update(state: dict, grads: Any, cfg: AdamWConfig
+                 ) -> tuple[dict, dict]:
+    """One AdamW step; returns (new_state, metrics)."""
+    step = state["step"] + 1
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    metrics = {"grad_norm": gnorm}
+    if cfg.compress and "ef" in state:
+        grads, new_ef = compressed_grads(grads, state["ef"])
+    else:
+        new_ef = state.get("ef")
+    lr = cosine_lr(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m2 = cfg.b1 * m + (1 - cfg.b1) * gf
+        v2 = cfg.b2 * v + (1 - cfg.b2) * gf * gf
+        mhat = m2 / b1c
+        vhat = v2 / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) \
+            + cfg.weight_decay * p.astype(jnp.float32)
+        return (p - (lr * delta).astype(p.dtype)), m2, v2
+
+    out = jax.tree.map(upd, state["params"], grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_state = {"params": new_params, "m": new_m, "v": new_v,
+                 "step": step}
+    if new_ef is not None:
+        new_state["ef"] = new_ef
+    metrics["lr"] = lr
+    return new_state, metrics

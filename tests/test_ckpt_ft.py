@@ -1,0 +1,145 @@
+"""Checkpointing + fault-tolerance driver behaviour."""
+
+import os
+import signal
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt.checkpoint import (
+    AsyncCheckpointer,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.ft.driver import DriverConfig, TrainDriver
+
+
+def _state(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {"w": jnp.asarray(rng.standard_normal((8, 4))),
+                   "b": jnp.asarray(rng.standard_normal(4))},
+        "m": {"w": jnp.zeros((8, 4)), "b": jnp.zeros(4)},
+        "step": jnp.int32(7),
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    state = _state()
+    save_checkpoint(str(tmp_path), 7, state)
+    assert latest_step(str(tmp_path)) == 7
+    restored = restore_checkpoint(str(tmp_path), 7, state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_uncommitted_checkpoint_ignored(tmp_path):
+    state = _state()
+    save_checkpoint(str(tmp_path), 5, state)
+    # a crashed write: directory without COMMIT
+    os.makedirs(tmp_path / "step_00000009")
+    assert latest_step(str(tmp_path)) == 5
+    with pytest.raises(FileNotFoundError):
+        restore_checkpoint(str(tmp_path), 9, state)
+
+
+def test_checkpoint_dtype_cast_on_restore(tmp_path):
+    state = _state()
+    save_checkpoint(str(tmp_path), 1, state)
+    like = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float16)
+        if x.dtype == jnp.float32 else x, state)
+    restored = restore_checkpoint(str(tmp_path), 1, like)
+    assert restored["params"]["w"].dtype == jnp.float16
+
+
+def test_async_checkpointer(tmp_path):
+    ck = AsyncCheckpointer(str(tmp_path))
+    ck.save(3, _state())
+    ck.wait()
+    assert latest_step(str(tmp_path)) == 3
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def _toy_step(state, batch):
+    new = dict(state)
+    new["step"] = state["step"] + 1
+    loss = jnp.sum(batch["x"]) * 0.0 + 1.0 / (1 + state["step"])
+    return new, {"loss": loss}
+
+
+def _data():
+    while True:
+        yield {"x": jnp.ones(3)}
+
+
+def test_driver_runs_and_checkpoints(tmp_path):
+    driver = TrainDriver(
+        DriverConfig(ckpt_dir=str(tmp_path), ckpt_every=4, max_steps=10),
+        _toy_step, _state(), _data())
+    summary = driver.run()
+    assert summary["step"] == 10
+    assert latest_step(str(tmp_path)) == 10   # final sync checkpoint
+
+
+def test_driver_resume(tmp_path):
+    d1 = TrainDriver(
+        DriverConfig(ckpt_dir=str(tmp_path), ckpt_every=5, max_steps=6),
+        _toy_step, _state(), _data())
+    d1.run()
+    d2 = TrainDriver(
+        DriverConfig(ckpt_dir=str(tmp_path), ckpt_every=5, max_steps=9),
+        _toy_step, _state(), _data(), state_template=_state())
+    resumed = d2.maybe_resume()
+    assert resumed == 6
+    summary = d2.run()
+    assert summary["step"] == 9
+
+
+def test_driver_straggler_detection(tmp_path):
+    calls = {"n": 0}
+
+    def slow_step(state, batch):
+        calls["n"] += 1
+        if calls["n"] == 12:
+            time.sleep(0.25)          # injected straggler
+        else:
+            time.sleep(0.002)
+        return _toy_step(state, batch)
+
+    flagged = []
+    driver = TrainDriver(
+        DriverConfig(ckpt_dir=str(tmp_path), ckpt_every=100, max_steps=15,
+                     straggler_factor=3.0,
+                     on_straggler=lambda s, dt: flagged.append(s)),
+        slow_step, _state(), _data())
+    summary = driver.run()
+    assert 12 in summary["stragglers"]
+    assert flagged
+
+
+def test_driver_preemption_checkpoint(tmp_path):
+    """SIGTERM mid-run -> driver stops and leaves a final checkpoint."""
+    def slowish(state, batch):
+        time.sleep(0.01)
+        return _toy_step(state, batch)
+
+    driver = TrainDriver(
+        DriverConfig(ckpt_dir=str(tmp_path), ckpt_every=1000,
+                     max_steps=500),
+        slowish, _state(), _data())
+    killer = threading.Timer(0.15, lambda: os.kill(os.getpid(),
+                                                   signal.SIGTERM))
+    killer.start()
+    summary = driver.run()
+    assert summary["preempted"]
+    assert 0 < summary["step"] < 500
+    assert latest_step(str(tmp_path)) == summary["step"]

@@ -1,0 +1,97 @@
+"""TPU cost-model properties: the physics the tuner learns from."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.costmodel import (
+    DEFAULT_TILES,
+    GemmConfig,
+    TPUSpec,
+    candidate_configs,
+    estimate_gemm_time,
+)
+
+
+def _best(m, k, n):
+    best = None
+    for cfg in candidate_configs(512, tiles=(0, 3)):
+        t = estimate_gemm_time(m, k, n, cfg).total_s
+        if best is None or t < best[0]:
+            best = (t, cfg)
+    return best
+
+
+def test_small_gemm_prefers_few_chips():
+    """Paper Table VII: 64x2048x64 ran 81x faster on few workers."""
+    _, cfg = _best(64, 2048, 64)
+    assert cfg.n_chips <= 4
+
+
+def test_large_square_gemm_prefers_many_chips():
+    """Paper Fig 9: big square GEMMs want (near-)max workers."""
+    _, cfg = _best(16384, 16384, 16384)
+    assert cfg.n_chips >= 128
+
+
+def test_paper_case_speedup_magnitude():
+    """The 64x2048x64 case: few-worker vs all-workers ratio is large,
+    matching the paper's 81.6x order of magnitude."""
+    t_best, _ = _best(64, 2048, 64)
+    t_max = estimate_gemm_time(64, 2048, 64,
+                               GemmConfig(512, "2D", 3)).total_s
+    assert t_max / t_best > 20
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=st.integers(8, 8192), k=st.integers(8, 8192),
+       n=st.integers(8, 8192))
+def test_terms_positive_and_finite(m, k, n):
+    tb = estimate_gemm_time(m, k, n, GemmConfig(16, "M", 0))
+    for v in (tb.compute_s, tb.memory_s, tb.collective_s, tb.launch_s):
+        assert np.isfinite(v) and v >= 0
+    assert tb.total_s > 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(p=st.sampled_from([2, 8, 64, 512]))
+def test_collective_term_grows_with_chips(p):
+    t1 = estimate_gemm_time(4096, 4096, 4096, GemmConfig(p, "K", 3))
+    t2 = estimate_gemm_time(4096, 4096, 4096,
+                            GemmConfig(min(512, p * 2), "K", 3))
+    assert t2.collective_s >= t1.collective_s * 0.8
+
+
+def test_compute_term_shrinks_with_chips():
+    t1 = estimate_gemm_time(8192, 8192, 8192, GemmConfig(1, "M", 3))
+    t64 = estimate_gemm_time(8192, 8192, 8192, GemmConfig(64, "M", 3))
+    assert t64.compute_s < t1.compute_s / 30
+
+
+def test_vmem_overflow_cliff():
+    """Tiles beyond VMEM get the spill penalty (memory term jumps)."""
+    small = estimate_gemm_time(4096, 4096, 4096, GemmConfig(1, "M", 0))
+    spec = TPUSpec(vmem_bytes=2**16)   # absurdly small VMEM
+    spilled = estimate_gemm_time(4096, 4096, 4096, GemmConfig(1, "M", 0),
+                                 spec)
+    assert spilled.memory_s > small.memory_s * 2
+
+
+def test_noise_is_reproducible_and_bounded():
+    rng1 = np.random.default_rng(0)
+    rng2 = np.random.default_rng(0)
+    a = estimate_gemm_time(512, 512, 512, GemmConfig(8, "M", 0),
+                           rng=rng1).total_s
+    b = estimate_gemm_time(512, 512, 512, GemmConfig(8, "M", 0),
+                           rng=rng2).total_s
+    clean = estimate_gemm_time(512, 512, 512, GemmConfig(8, "M", 0)).total_s
+    assert a == b
+    assert 0.5 * clean < a < 5 * clean
+
+
+def test_candidate_set_structure():
+    cands = candidate_configs(512)
+    chips = {c.n_chips for c in cands}
+    assert chips == {1, 2, 4, 8, 16, 32, 64, 128, 256, 512}
+    assert all(c.partition != "2D" or c.n_chips >= 4 for c in cands)
+    assert all(0 <= c.tile_id < len(DEFAULT_TILES) for c in cands)

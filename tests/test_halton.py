@@ -1,0 +1,66 @@
+"""Scrambled Halton sampler: domain, discrepancy, memory bound."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.halton import (
+    gemm_bytes,
+    halton_sequence,
+    sample_gemm_dims,
+    scrambled_halton,
+)
+
+
+def test_plain_halton_low_discrepancy_vs_random():
+    """Star-discrepancy proxy: max deviation of empirical CDF on a grid
+    must beat i.i.d. uniform sampling."""
+    n = 512
+    h = halton_sequence(n, 2)
+    r = np.random.default_rng(0).random((n, 2))
+
+    def disc(pts):
+        worst = 0.0
+        for gx in np.linspace(0.1, 1.0, 10):
+            for gy in np.linspace(0.1, 1.0, 10):
+                frac = np.mean((pts[:, 0] < gx) & (pts[:, 1] < gy))
+                worst = max(worst, abs(frac - gx * gy))
+        return worst
+
+    assert disc(h) < disc(r)
+
+
+def test_scrambled_halton_in_unit_cube():
+    pts = scrambled_halton(1000, 3, seed=3)
+    assert pts.shape == (1000, 3)
+    assert np.all(pts >= 0.0) and np.all(pts < 1.0)
+
+
+def test_scrambling_changes_points_but_keeps_uniformity():
+    a = scrambled_halton(500, 3, seed=0)
+    b = scrambled_halton(500, 3, seed=1)
+    assert not np.allclose(a, b)
+    for pts in (a, b):
+        assert abs(pts.mean() - 0.5) < 0.05
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), mb=st.sampled_from([50, 100, 500]))
+def test_samples_respect_memory_budget(seed, mb):
+    dims = sample_gemm_dims(64, mem_limit_bytes=mb * 2**20, seed=seed)
+    assert dims.shape == (64, 3)
+    assert np.all(dims >= 8)
+    assert np.all(gemm_bytes(dims[:, 0], dims[:, 1], dims[:, 2])
+                  <= mb * 2**20)
+
+
+def test_gemm_bytes_formula():
+    # paper §IV-B: 4(mk + kn + mn) bytes single precision
+    assert gemm_bytes(10, 20, 30, 4) == 4 * (200 + 600 + 300)
+    assert gemm_bytes(10, 20, 30, 8) == 8 * (200 + 600 + 300)
+
+
+def test_deterministic_given_seed():
+    a = sample_gemm_dims(32, mem_limit_bytes=2**27, seed=7)
+    b = sample_gemm_dims(32, mem_limit_bytes=2**27, seed=7)
+    np.testing.assert_array_equal(a, b)

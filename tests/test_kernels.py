@@ -1,0 +1,103 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret=True."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import (
+    flash_attention_pallas,
+    flash_attention_ref,
+    grouped_matmul_pallas,
+    grouped_matmul_ref,
+    matmul_pallas,
+    matmul_ref,
+)
+
+_RNG = np.random.default_rng(0)
+
+
+def _arr(shape, dtype):
+    return jnp.asarray(_RNG.standard_normal(shape), dtype=dtype)
+
+
+_MATMUL_CASES = [
+    # (m, k, n, bm, bk, bn)
+    (64, 64, 64, 64, 64, 64),
+    (128, 256, 128, 64, 128, 64),
+    (100, 130, 70, 32, 64, 32),          # ragged, padded grid
+    (8, 8, 8, 32, 32, 32),               # tile > dims
+    (256, 64, 512, 128, 64, 128),
+    (33, 257, 65, 16, 128, 16),
+]
+
+
+@pytest.mark.parametrize("m,k,n,bm,bk,bn", _MATMUL_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_matches_oracle(m, k, n, bm, bk, bn, dtype):
+    a, b = _arr((m, k), dtype), _arr((k, n), dtype)
+    out = matmul_pallas(a, b, bm=bm, bk=bk, bn=bn, interpret=True)
+    ref = matmul_ref(a, b)
+    tol = 5e-5 if dtype == jnp.float32 else 1e-1
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(8, 96), k=st.integers(8, 96), n=st.integers(8, 96))
+def test_matmul_property_random_shapes(m, k, n):
+    a, b = _arr((m, k), jnp.float32), _arr((k, n), jnp.float32)
+    out = matmul_pallas(a, b, bm=32, bk=32, bn=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(matmul_ref(a, b)),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("e,c,d,f", [(4, 64, 32, 48), (2, 100, 64, 64),
+                                     (8, 16, 16, 96)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grouped_matmul_matches_oracle(e, c, d, f, dtype):
+    x, w = _arr((e, c, d), dtype), _arr((e, d, f), dtype)
+    out = grouped_matmul_pallas(x, w, bm=32, bk=32, bn=32, interpret=True)
+    ref = grouped_matmul_ref(x, w)
+    tol = 5e-5 if dtype == jnp.float32 else 1e-1
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("seq,bq,bkv", [(128, 32, 32), (96, 32, 64),
+                                        (64, 64, 64)])
+@pytest.mark.parametrize("window", [None, 48])
+def test_flash_attention_matches_oracle(seq, bq, bkv, window):
+    q = _arr((3, seq, 64), jnp.float32)
+    k = _arr((3, seq, 64), jnp.float32)
+    v = _arr((3, seq, 64), jnp.float32)
+    out = flash_attention_pallas(q, k, v, bq=bq, bkv=bkv, causal=True,
+                                 window=window, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_bf16():
+    q = _arr((2, 64, 32), jnp.bfloat16)
+    out = flash_attention_pallas(q, q, q, bq=32, bkv=32, interpret=True)
+    ref = flash_attention_ref(q, q, q)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=5e-2, rtol=5e-2)
+
+
+def test_flash_attention_rejects_bad_shapes():
+    q = _arr((2, 64, 32), jnp.float32)
+    k = _arr((3, 64, 32), jnp.float32)
+    with pytest.raises(ValueError):
+        flash_attention_pallas(q, k, k, interpret=True)
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        matmul_pallas(_arr((4, 8), jnp.float32), _arr((9, 4), jnp.float32),
+                      interpret=True)

@@ -1,0 +1,112 @@
+"""Model-zoo behaviour: learnability, persistence, packed inference."""
+
+import numpy as np
+import pytest
+
+from repro.core.ml import (
+    AdaBoostR2Regressor,
+    BayesianRidgeRegression,
+    DecisionTreeRegressor,
+    ElasticNetRegression,
+    HistGradientBoostingRegressor,
+    KFold,
+    KNNRegressor,
+    LinearRegression,
+    RandomForestRegressor,
+    RidgeRegression,
+    XGBRegressor,
+    grid_search,
+    rmse,
+    stratified_train_test_split,
+)
+from repro.core.ml.registry import MODEL_REGISTRY, model_from_dict
+from repro.core.ml.tree import PackedEnsemble, tree_predict
+
+
+def _dataset(n=400, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.uniform(-2, 2, (n, 5))
+    y = (2.0 * X[:, 0] - X[:, 1] ** 2 + np.sin(3 * X[:, 2])
+         + 0.05 * rng.standard_normal(n))
+    return X, y
+
+
+LEARNERS = [
+    (LinearRegression, {}, 0.9),
+    (RidgeRegression, {"alpha": 0.1}, 0.9),
+    (ElasticNetRegression, {"alpha": 0.001}, 0.9),
+    (BayesianRidgeRegression, {}, 0.9),
+    (DecisionTreeRegressor, {"max_depth": 8}, 0.5),
+    (RandomForestRegressor, {"n_estimators": 30, "max_depth": 10}, 0.4),
+    (AdaBoostR2Regressor, {"n_estimators": 15, "max_depth": 5}, 0.6),
+    (XGBRegressor, {"n_estimators": 80, "max_depth": 4}, 0.3),
+    (HistGradientBoostingRegressor, {"n_estimators": 80}, 0.3),
+    (KNNRegressor, {"k": 5}, 0.5),
+]
+
+
+@pytest.mark.parametrize("cls,params,max_nrmse",
+                         LEARNERS, ids=[c.__name__ for c, _, _ in LEARNERS])
+def test_model_learns(cls, params, max_nrmse):
+    X, y = _dataset()
+    Xtr, Xte, ytr, yte = stratified_train_test_split(X, y, seed=0)
+    model = cls(**params).fit(Xtr, ytr)
+    base = rmse(yte, np.full_like(yte, ytr.mean()))
+    assert rmse(yte, model.predict(Xte)) < max_nrmse * base
+
+
+@pytest.mark.parametrize("cls,params,_",
+                         LEARNERS, ids=[c.__name__ for c, _, _ in LEARNERS])
+def test_model_persistence_roundtrip(cls, params, _):
+    X, y = _dataset(150, seed=1)
+    model = cls(**params).fit(X, y)
+    clone = model_from_dict(model.to_dict())
+    np.testing.assert_allclose(model.predict(X[:20]), clone.predict(X[:20]),
+                               rtol=1e-10, atol=1e-10)
+
+
+def test_packed_ensemble_matches_per_tree():
+    X, y = _dataset(200, seed=2)
+    forest = RandomForestRegressor(n_estimators=12, max_depth=6,
+                                   seed=3).fit(X, y)
+    packed = PackedEnsemble(forest.trees_)
+    naive = np.stack([tree_predict(t, X[:31]) for t in forest.trees_],
+                     axis=1)
+    np.testing.assert_allclose(packed.predict_all(X[:31]), naive,
+                               atol=1e-12)
+
+
+def test_kfold_partitions_everything():
+    y = np.random.default_rng(4).standard_normal(103)
+    kf = KFold(n_splits=5, seed=0)
+    seen = np.zeros(103, dtype=int)
+    for train, val in kf.split(y):
+        assert len(np.intersect1d(train, val)) == 0
+        seen[val] += 1
+    np.testing.assert_array_equal(seen, 1)
+
+
+def test_stratified_split_balances_label_quantiles():
+    rng = np.random.default_rng(5)
+    y = rng.lognormal(0, 2, 600)
+    X = rng.standard_normal((600, 2))
+    _, _, ytr, yte = stratified_train_test_split(X, y, test_fraction=0.3,
+                                                 seed=1)
+    assert abs(len(yte) / 600 - 0.3) < 0.05
+    assert abs(np.median(np.log(ytr)) - np.median(np.log(yte))) < 0.4
+
+
+def test_grid_search_picks_sane_depth():
+    X, y = _dataset(300, seed=6)
+    best, score = grid_search(
+        lambda **p: DecisionTreeRegressor(**p),
+        {"max_depth": [1, 8], "min_samples_leaf": [2]}, X, y, n_splits=3)
+    assert best["max_depth"] == 8
+    assert np.isfinite(score)
+
+
+def test_registry_complete():
+    assert set(MODEL_REGISTRY) >= {
+        "linear_regression", "elasticnet", "bayesian_regression",
+        "decision_tree", "random_forest", "adaboost", "xgboost",
+        "lightgbm", "knn"}

@@ -1,0 +1,119 @@
+"""Per-architecture smoke tests (reduced configs): one forward/train step
+on CPU asserting output shapes + no NaNs, plus the serving-path
+invariant (prefill + decode == full forward)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.models.transformer as T
+from repro.configs import ARCH_IDS, get_config, get_smoke_config, build_model
+from repro.models import Ctx
+
+B, S = 2, 32
+
+
+def _batch(cfg, rng, seq=S):
+    tokens = jax.random.randint(rng, (B, seq), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.family == "audio":
+        batch["audio_emb"] = jax.random.normal(
+            rng, (B, cfg.encoder_len, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    params = model.init(rng)
+    batch = _batch(cfg, rng)
+    loss, grads = jax.value_and_grad(
+        lambda p: model.loss(p, batch))(params)
+    assert loss.shape == ()
+    assert jnp.isfinite(loss)
+    gnorm = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads))
+    assert jnp.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode_shapes(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(1)
+    params = model.init(rng)
+    dctx = Ctx(mode="decode", cache_len=S + 8)
+    cache = model.init_cache(B, dctx)
+    tok = jax.random.randint(rng, (B, 1), 0, cfg.vocab)
+    logits, new_cache = model.decode_step(params, tok, cache,
+                                          jnp.int32(0), dctx)
+    assert logits.shape == (B, cfg.vocab)
+    assert jnp.all(jnp.isfinite(logits))
+    # cache structure preserved
+    assert (jax.tree_util.tree_structure(cache)
+            == jax.tree_util.tree_structure(new_cache))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_matches_full_forward(arch, monkeypatch):
+    """Serving invariant: decode after prefill == one big forward."""
+    # capacity drops in MoE are non-causal by construction; disable them
+    orig = T._moe_spec
+    monkeypatch.setattr(
+        T, "_moe_spec",
+        lambda cfg: dataclasses.replace(orig(cfg), capacity_factor=8.0))
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(2)
+    params = model.init(rng, jnp.float32)
+    seq = 24
+    tokens = jax.random.randint(rng, (B, seq + 1), 0, cfg.vocab)
+    ctx = Ctx(mode="prefill", cache_len=seq + 8, remat=False)
+    if cfg.family == "audio":
+        audio = jax.random.normal(rng, (B, cfg.encoder_len, cfg.d_model))
+        full_logits, _ = model.prefill(
+            params, {"tokens": tokens, "audio_emb": audio}, ctx)
+        _, cache = model.prefill(
+            params, {"tokens": tokens[:, :seq], "audio_emb": audio}, ctx)
+    else:
+        full_logits, _ = model.prefill(params, tokens, ctx)
+        _, cache = model.prefill(params, tokens[:, :seq], ctx)
+    dctx = Ctx(mode="decode", cache_len=seq + 8)
+    dec_logits, _ = model.decode_step(params, tokens[:, seq:seq + 1],
+                                      cache, jnp.int32(seq), dctx)
+    scale = float(jnp.abs(full_logits).max())
+    assert float(jnp.abs(full_logits - dec_logits).max()) < 2e-4 * scale \
+        + 1e-4
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_configs_match_spec(arch):
+    """The full (non-smoke) configs carry the exact assigned dims."""
+    cfg = get_config(arch)
+    expected = {
+        "deepseek-v2-236b": (60, 5120, 128, 128, 102_400),
+        "mixtral-8x22b": (56, 6144, 48, 8, 32_768),
+        "starcoder2-3b": (30, 3072, 24, 2, 49_152),
+        "granite-8b": (36, 4096, 32, 8, 49_152),
+        "chatglm3-6b": (28, 4096, 32, 2, 65_024),
+        "stablelm-1.6b": (24, 2048, 32, 32, 100_352),
+        "whisper-tiny": (4, 384, 6, 6, 51_865),
+        "chameleon-34b": (48, 8192, 64, 8, 65_536),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 256_000),
+        "xlstm-125m": (12, 768, 4, 4, 50_304),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.vocab)
+    assert got == expected
+
+
+def test_moe_configs_match_spec():
+    ds = get_config("deepseek-v2-236b")
+    assert (ds.n_experts, ds.top_k, ds.n_shared_experts,
+            ds.kv_lora_rank) == (160, 6, 2, 512)
+    mx = get_config("mixtral-8x22b")
+    assert (mx.n_experts, mx.top_k, mx.d_ff) == (8, 2, 16384)

@@ -1,0 +1,114 @@
+"""Yeo-Johnson / scaler / LOF / correlation-prune properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.preprocessing import (
+    PreprocessPipeline,
+    StandardScaler,
+    YeoJohnson,
+    correlation_prune,
+    local_outlier_factor,
+    yeo_johnson_mle_lambda,
+    yeo_johnson_transform,
+    yeo_johnson_transform_matrix,
+)
+
+
+@settings(max_examples=50, deadline=None)
+@given(lam=st.floats(-3, 3),
+       x=st.lists(st.floats(-100, 100), min_size=3, max_size=30))
+def test_yj_monotone(lam, x):
+    """YJ is strictly monotone for every λ (order preserved)."""
+    xs = np.unique(np.asarray(x, dtype=np.float64))
+    if len(xs) < 2:
+        return
+    y = yeo_johnson_transform(xs, lam)
+    assert np.all(np.diff(y) > -1e-12)
+
+
+def test_yj_identity_at_lambda_one():
+    x = np.linspace(-5, 5, 21)
+    np.testing.assert_allclose(yeo_johnson_transform(x, 1.0), x, atol=1e-12)
+
+
+def test_yj_log_branch():
+    x = np.array([0.0, 1.0, np.e - 1.0])
+    np.testing.assert_allclose(
+        yeo_johnson_transform(x, 0.0), np.log1p(x), atol=1e-12)
+
+
+def test_yj_matrix_matches_columnwise():
+    rng = np.random.default_rng(0)
+    X = rng.standard_normal((40, 5)) * 7
+    lams = np.array([-2.0, 0.0, 0.5, 2.0, 3.0])
+    ref = np.stack([yeo_johnson_transform(X[:, j], lams[j])
+                    for j in range(5)], axis=1)
+    np.testing.assert_allclose(
+        yeo_johnson_transform_matrix(X, lams), ref, atol=1e-10)
+
+
+def test_yj_mle_gaussianises_lognormal():
+    """MLE λ on lognormal data should pull skewness toward 0."""
+    rng = np.random.default_rng(1)
+    x = rng.lognormal(0.0, 1.0, 800)
+
+    def skew(v):
+        v = v - v.mean()
+        return abs(np.mean(v**3) / (np.mean(v**2) ** 1.5 + 1e-12))
+
+    lam = yeo_johnson_mle_lambda(x)
+    assert skew(yeo_johnson_transform(x, lam)) < 0.3 * skew(x)
+
+
+def test_scaler_roundtrip_stats():
+    rng = np.random.default_rng(2)
+    X = rng.standard_normal((200, 4)) * [1, 10, 100, 0.1] + [5, -3, 0, 2]
+    Xt = StandardScaler().fit_transform(X)
+    np.testing.assert_allclose(Xt.mean(0), 0.0, atol=1e-10)
+    np.testing.assert_allclose(Xt.std(0), 1.0, atol=1e-10)
+
+
+def test_lof_flags_planted_outliers():
+    rng = np.random.default_rng(3)
+    inliers = rng.standard_normal((200, 3))
+    outliers = rng.standard_normal((5, 3)) * 0.1 + 15.0
+    X = np.concatenate([inliers, outliers])
+    lof = local_outlier_factor(X, k=10)
+    # every planted outlier scores above the inlier 95th percentile
+    assert lof[200:].min() > np.quantile(lof[:200], 0.95)
+
+
+def test_correlation_prune_drops_duplicate():
+    rng = np.random.default_rng(4)
+    a = rng.standard_normal(300)
+    b = rng.standard_normal(300)
+    X = np.stack([a, a * 2.0 + 1e-9, b], axis=1)   # col1 = col0 duplicate
+    alive, kept = correlation_prune(X, threshold=0.8)
+    assert len(kept) == 2
+    assert 2 in kept                                # independent col stays
+    assert (0 in kept) != (1 in kept)               # one duplicate dropped
+
+
+def test_pipeline_roundtrip_persistence():
+    rng = np.random.default_rng(5)
+    X = np.abs(rng.lognormal(0, 1, (150, 6)))
+    y = rng.standard_normal(150)
+    pipe = PreprocessPipeline()
+    Xt, yt = pipe.fit_transform(X, y)
+    assert Xt.shape[0] == yt.shape[0] <= 150
+    pipe2 = PreprocessPipeline.from_dict(pipe.to_dict())
+    Xq = np.abs(rng.lognormal(0, 1, (10, 6)))
+    np.testing.assert_allclose(pipe.transform(Xq), pipe2.transform(Xq),
+                               atol=1e-12)
+
+
+def test_pipeline_never_drops_more_than_ten_percent():
+    rng = np.random.default_rng(6)
+    X = rng.standard_normal((100, 4))
+    X[::7] += 40.0   # 15% extreme rows
+    y = rng.standard_normal(100)
+    pipe = PreprocessPipeline(lof_threshold=1.01)
+    Xt, yt = pipe.fit_transform(X, y)
+    assert len(yt) >= 90

@@ -1,0 +1,120 @@
+"""Sharding rules + serving options (int8 KV cache) across the zoo."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config, build_model
+from repro.models import Ctx
+from repro.models.params import ParamDef
+
+
+class _FakeMesh:
+    """Just enough mesh surface for the rule tables (no jax devices)."""
+
+    def __init__(self, shape: dict[str, int]):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("mesh_shape", [
+    {"data": 16, "model": 16},
+    {"pod": 2, "data": 16, "model": 16},
+])
+def test_param_specs_divisible(arch, mesh_shape):
+    """Every sharded param dim must divide its mesh axes — the invariant
+    GSPMD requires for every (arch x mesh) cell."""
+    from repro.dist.sharding import param_rules
+    from repro.models.params import param_specs
+
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    mesh = _FakeMesh(mesh_shape)
+    rules = param_rules(cfg, mesh)
+    specs = model.param_partition_specs(rules)
+
+    defs_leaves = jax.tree.leaves(
+        model.defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    spec_leaves = jax.tree.leaves(
+        specs, is_leaf=lambda s: s.__class__.__name__ == "PartitionSpec")
+    assert len(defs_leaves) == len(spec_leaves)
+    for d, spec in zip(defs_leaves, spec_leaves):
+        for dim, axis in zip(d.shape, tuple(spec)):
+            if axis is None:
+                continue
+            axes = axis if isinstance(axis, tuple) else (axis,)
+            size = 1
+            for a in axes:
+                size *= mesh_shape[a]
+            assert dim % size == 0, \
+                f"{arch}: dim {dim} not divisible by {axes} ({size})"
+
+
+def test_int8_kv_cache_decode_accuracy():
+    """int8 KV decode within 3% relative logit error of fp (the §Perf C1
+    quality gate)."""
+    cfg = get_smoke_config("stablelm-1.6b")
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    params = model.init(rng, jnp.float32)
+    S = 24
+    tokens = jax.random.randint(rng, (2, S + 1), 0, cfg.vocab)
+    ctx = Ctx(mode="prefill", cache_len=S + 8, remat=False)
+    full_logits, _ = model.prefill(params, tokens, ctx)
+    qctx = Ctx(mode="prefill", cache_len=S + 8, remat=False,
+               kv_quantized=True)
+    _, qcache = model.prefill(params, tokens[:, :S], qctx)
+    dctx = Ctx(mode="decode", cache_len=S + 8, kv_quantized=True)
+    ql, _ = model.decode_step(params, tokens[:, S:S + 1], qcache,
+                              jnp.int32(S), dctx)
+    rel = float(jnp.abs(full_logits - ql).max()) \
+        / float(jnp.abs(full_logits).max())
+    assert rel < 0.03
+
+
+def test_int8_kv_cache_halves_bytes():
+    from repro.models.layers import init_kv_cache
+
+    fp = init_kv_cache(2, 64, 4, 32, jnp.bfloat16)
+    q = init_kv_cache(2, 64, 4, 32, jnp.bfloat16, quantized=True)
+
+    def nbytes(c):
+        return sum(x.size * x.dtype.itemsize
+                   for x in jax.tree.leaves(c))
+
+    assert nbytes(q) < 0.6 * nbytes(fp)
+
+
+def test_windowed_ring_cache_decode():
+    """Ring-buffer cache: tokens beyond the window are forgotten."""
+    from repro.models import layers as L
+    from repro.models.params import init_params
+
+    spec = L.AttnSpec(d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+                      window=8)
+    p = init_params(L.attention_defs(spec), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 20, 32))
+    out_ref, (k, v) = L.attention_train(p, x, spec)
+    cache = L.seed_kv_cache(k[:, :19], v[:, :19], 8, windowed=True)
+    out_dec, _ = L.attention_decode(p, x[:, 19:20], spec, cache,
+                                    jnp.int32(19))
+    np.testing.assert_allclose(np.asarray(out_dec[:, 0]),
+                               np.asarray(out_ref[:, 19]),
+                               atol=2e-5, rtol=2e-4)
+
+
+def test_auto_spec_heuristics():
+    from repro.dist.sharding import auto_spec
+
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    # KV cache (B=128, cap=32768, Hkv=8, 128): batch->data, cap->model
+    s = auto_spec((128, 32768, 8, 128), mesh, batch_dim=0)
+    assert tuple(s) == ("data", "model", None, None)
+    # scan-stacked (L=59, B=128, cap, R): batch at dim 1
+    s = auto_spec((59, 128, 32768, 576), mesh, batch_dim=1)
+    assert tuple(s)[1] == "data" and "model" in tuple(s)
+    # B=1 long-context: nothing shardable on batch
+    s = auto_spec((1, 4096, 8, 128), mesh, batch_dim=0)
+    assert tuple(s)[0] is None
