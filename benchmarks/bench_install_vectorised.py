@@ -1,0 +1,105 @@
+"""Install-time hot path: scalar-loop vs vectorised timing program.
+
+The paper's premise is that the install-time timing program plus runtime
+model evaluation must cost less than the GEMM time they save.  This
+suite measures the data-gathering grid (the dominant install cost) both
+ways on the same (dims x configs) workload:
+
+  * ``scalar``  — the historical double loop over estimate_gemm_time
+  * ``batched`` — one broadcasted estimate_batch_terms pass
+
+and reports the batched tuner dispatch (select_many over a grouped/MoE
+shape list) against per-shape scalar selects.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import simulated_run
+from repro.core import (
+    AdsalaTuner,
+    SimulatedBackend,
+    candidate_configs,
+    estimate_batch_terms,
+    estimate_gemm_time,
+    time_gemm_grid,
+)
+from repro.core.halton import sample_gemm_dims
+
+
+def _bench(fn, reps: int = 3) -> float:
+    fn()  # warm
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run() -> list[str]:
+    lines = []
+
+    # --- timing-program grid: 400 dims x 128 configs ----------------------
+    dims = sample_gemm_dims(400, mem_limit_bytes=500 * 2**20, seed=0)
+    cfgs = candidate_configs(512)[:128]
+
+    def scalar_grid():
+        for m, k, n in dims:
+            for c in cfgs:
+                estimate_gemm_time(int(m), int(k), int(n), c).total_s
+
+    t_scalar = _bench(scalar_grid, reps=1)
+    t_batch = _bench(
+        lambda: estimate_batch_terms(dims, cfgs).total_s)
+    lines.append(f"install_grid_scalar,{t_scalar*1e6:.0f},400x128_cells")
+    lines.append(f"install_grid_batched,{t_batch*1e6:.0f},400x128_cells")
+    lines.append(
+        f"install_grid_speedup,{t_scalar/t_batch:.1f},x_scalar_over_batched")
+
+    # --- full gather_data path (3 repeats, median) ------------------------
+    backend = SimulatedBackend(seed=0)
+    t_gather = _bench(lambda: time_gemm_grid(backend, dims, cfgs, 3))
+    lines.append(f"gather_data_batched,{t_gather*1e6:.0f},3_repeats_median")
+
+    # --- batched tuner dispatch ------------------------------------------
+    _, _, _, _, art = simulated_run(500)
+    shapes = [(int(m), int(k), int(n)) for m, k, n in dims[:64]]
+
+    tuner = AdsalaTuner.from_artifact(art)
+    tuner._cache.clear()
+    t_scalar_sel = _bench(
+        lambda: [tuner._cache.clear(), [tuner.select(*s) for s in shapes]],
+        reps=5)
+    tuner._cache.clear()
+    t_batch_sel = _bench(
+        lambda: [tuner._cache.clear(), tuner.select_many(shapes)],
+        reps=5)
+    lines.append(f"tuner_select_scalar_64,{t_scalar_sel*1e6:.0f},cold_cache")
+    lines.append(f"tuner_select_many_64,{t_batch_sel*1e6:.0f},cold_cache")
+    lines.append(
+        f"tuner_dispatch_speedup,{t_scalar_sel/t_batch_sel:.1f},"
+        "x_scalar_over_batched")
+
+    # --- warm-start: artifact-preloaded cache hits ------------------------
+    import json
+    import os
+    with open(os.path.join(art, "config.json")) as f:
+        ws = json.load(f)["warm_start"]
+    warm = AdsalaTuner.from_artifact(art)
+    n_pre = len(warm._cache)
+    probe = [tuple(d) for d in ws["dims"][:32]]
+    warm.select_many(probe)
+    lines.append(
+        f"warm_start_preloaded,{n_pre},cache_entries")
+    lines.append(
+        f"warm_start_hit_rate,{warm.stats['cache_hits']/len(probe):.2f},"
+        "install_sampled_dims")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -20,12 +20,14 @@ def main() -> None:
         bench_gflops_curve,
         bench_heatmap,
         bench_histogram,
+        bench_install_vectorised,
         bench_model_selection,
         bench_predesigned,
         bench_roofline,
         bench_speedup_stats,
     )
     suites = [
+        ("install_vectorised", bench_install_vectorised.run),
         ("fig1_fig8_histogram", bench_histogram.run),
         ("fig9_heatmap", bench_heatmap.run),
         ("table3_table4_model_selection", bench_model_selection.run),

@@ -1,0 +1,7 @@
+"""Compatibility shims for optional third-party packages.
+
+The container this repo targets is hermetic: anything not already baked
+into the image cannot be installed.  Modules here provide minimal,
+deterministic stand-ins that keep the test suite and tooling runnable
+when an optional dependency is absent.
+"""

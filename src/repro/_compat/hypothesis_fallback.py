@@ -1,0 +1,166 @@
+"""Deterministic stand-in for the tiny slice of `hypothesis` the tests use.
+
+The real property-based testing library is declared in pyproject.toml's
+test extra, but the hermetic CI container cannot install it.  This module
+implements just enough of its API — ``given``, ``settings``, ``assume``
+and the ``integers`` / ``floats`` / ``sampled_from`` / ``lists``
+strategies — to run the same property tests as fixed-seed example sweeps:
+
+* every ``@given`` test executes ``max_examples`` times with inputs drawn
+  from a per-test RNG seeded by a CRC of the test name (stable across
+  processes and runs, unlike ``hash()``);
+* the first two examples pin each strategy to its bounds, so boundary
+  values are always exercised;
+* ``sampled_from`` cycles its elements, guaranteeing full coverage.
+
+When the real package is importable, tests/conftest.py leaves it alone —
+this fallback only ever fills a missing import.
+"""
+
+from __future__ import annotations
+
+import sys
+import types
+import zlib
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+__all__ = ["given", "settings", "assume", "strategies", "install"]
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class UnsatisfiedAssumption(Exception):
+    """Raised by :func:`assume` to discard the current example."""
+
+
+def assume(condition: Any) -> bool:
+    if not condition:
+        raise UnsatisfiedAssumption
+    return True
+
+
+class SearchStrategy:
+    """Base strategy: ``example(rng, i)`` draws the i-th example."""
+
+    def example(self, rng: np.random.Generator, i: int) -> Any:
+        raise NotImplementedError
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value: int, max_value: int) -> None:
+        self.min_value, self.max_value = int(min_value), int(max_value)
+
+    def example(self, rng: np.random.Generator, i: int) -> int:
+        if i == 0:
+            return self.min_value
+        if i == 1:
+            return self.max_value
+        return int(rng.integers(self.min_value, self.max_value + 1))
+
+
+class _Floats(SearchStrategy):
+    def __init__(self, min_value: float, max_value: float,
+                 **_: Any) -> None:
+        self.min_value, self.max_value = float(min_value), float(max_value)
+
+    def example(self, rng: np.random.Generator, i: int) -> float:
+        if i == 0:
+            return self.min_value
+        if i == 1:
+            return self.max_value
+        return float(rng.uniform(self.min_value, self.max_value))
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, elements: Sequence[Any]) -> None:
+        self.elements = list(elements)
+
+    def example(self, rng: np.random.Generator, i: int) -> Any:
+        return self.elements[i % len(self.elements)]
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elements: SearchStrategy, *, min_size: int = 0,
+                 max_size: int | None = None, **_: Any) -> None:
+        self.elements = elements
+        self.min_size = min_size
+        self.max_size = max_size if max_size is not None else min_size + 10
+
+    def example(self, rng: np.random.Generator, i: int) -> list:
+        size = (self.min_size if i == 0
+                else int(rng.integers(self.min_size, self.max_size + 1)))
+        return [self.elements.example(rng, i) for _ in range(size)]
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return _Integers(min_value, max_value)
+
+
+def floats(min_value: float, max_value: float, **kw: Any) -> SearchStrategy:
+    return _Floats(min_value, max_value, **kw)
+
+
+def sampled_from(elements: Sequence[Any]) -> SearchStrategy:
+    return _SampledFrom(elements)
+
+
+def lists(elements: SearchStrategy, **kw: Any) -> SearchStrategy:
+    return _Lists(elements, **kw)
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES,
+             deadline: Any = None, **_: Any) -> Callable:
+    def deco(fn: Callable) -> Callable:
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategy_kw: SearchStrategy) -> Callable:
+    def deco(fn: Callable) -> Callable:
+        def runner() -> None:
+            n = getattr(runner, "_fallback_max_examples",
+                        _DEFAULT_MAX_EXAMPLES)
+            rng = np.random.default_rng(
+                zlib.crc32(fn.__name__.encode("utf-8")))
+            for i in range(n):
+                kw = {name: s.example(rng, i)
+                      for name, s in strategy_kw.items()}
+                try:
+                    fn(**kw)
+                except UnsatisfiedAssumption:
+                    continue
+
+        # plain zero-arg callable: pytest must not mistake the strategy
+        # parameters for fixtures, so no functools.wraps/__wrapped__
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        runner.hypothesis_fallback = True  # type: ignore[attr-defined]
+        return runner
+    return deco
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` in :data:`sys.modules`.
+
+    Call only when the real package failed to import.
+    """
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.assume = assume
+    mod.HealthCheck = types.SimpleNamespace(too_slow=None, filter_too_much=None)
+
+    st_mod = types.ModuleType("hypothesis.strategies")
+    st_mod.integers = integers
+    st_mod.floats = floats
+    st_mod.sampled_from = sampled_from
+    st_mod.lists = lists
+    st_mod.SearchStrategy = SearchStrategy
+    mod.strategies = st_mod
+
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st_mod

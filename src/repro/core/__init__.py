@@ -7,10 +7,13 @@ Pipeline:  halton -> timing backend -> features/preprocessing -> ml zoo
 
 from repro.core.costmodel import (
     DEFAULT_TILES,
+    BatchBreakdown,
     GemmConfig,
     TimeBreakdown,
     TPUSpec,
     candidate_configs,
+    estimate_batch,
+    estimate_batch_terms,
     estimate_gemm_time,
 )
 from repro.core.halton import gemm_bytes, sample_gemm_dims, scrambled_halton
@@ -23,12 +26,17 @@ from repro.core.installer import (
     install,
     load_artifact,
 )
-from repro.core.timing import MeasuredCPUBackend, SimulatedBackend
+from repro.core.timing import (
+    MeasuredCPUBackend,
+    SimulatedBackend,
+    time_gemm_grid,
+)
 from repro.core.tuner import AdsalaTuner
 
 __all__ = [
-    "TPUSpec", "GemmConfig", "TimeBreakdown", "DEFAULT_TILES",
-    "candidate_configs", "estimate_gemm_time",
+    "TPUSpec", "GemmConfig", "TimeBreakdown", "BatchBreakdown",
+    "DEFAULT_TILES", "candidate_configs", "estimate_gemm_time",
+    "estimate_batch", "estimate_batch_terms", "time_gemm_grid",
     "scrambled_halton", "sample_gemm_dims", "gemm_bytes",
     "InstallConfig", "GatheredData", "InstallReport", "gather_data",
     "install", "load_artifact", "DEFAULT_WORKER_CONFIG",

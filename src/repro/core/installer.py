@@ -30,7 +30,7 @@ from repro.core.ml import grid_search, make_model, rmse
 from repro.core.ml.base import normalised_rmse, stratified_train_test_split
 from repro.core.ml.registry import default_param_grids, model_from_dict
 from repro.core.preprocessing import PreprocessPipeline
-from repro.core.timing import SimulatedBackend, TimingBackend
+from repro.core.timing import SimulatedBackend, TimingBackend, time_gemm_grid
 
 __all__ = [
     "GatheredData", "InstallConfig", "ModelReport", "InstallReport",
@@ -142,12 +142,7 @@ def gather_data(backend: TimingBackend, cfg: InstallConfig) -> GatheredData:
         dtype_bytes=cfg.dtype_bytes, seed=cfg.seed,
         dim_min=cfg.dim_min, dim_max=cfg.dim_max, log_space=cfg.log_space)
     cfgs = costmodel.candidate_configs(cfg.max_chips, tiles=cfg.tile_ids)
-    times = np.empty((len(dims), len(cfgs)))
-    for i, (m, k, n) in enumerate(dims):
-        for j, c in enumerate(cfgs):
-            reps = [backend.time_gemm(int(m), int(k), int(n), c)
-                    for _ in range(cfg.repeats)]
-            times[i, j] = float(np.median(reps))
+    times = time_gemm_grid(backend, dims, cfgs, cfg.repeats)
     return GatheredData(dims=dims, cfgs=cfgs, times=times)
 
 
@@ -215,6 +210,23 @@ def _measure_eval_time(model: Any, pipe: PreprocessPipeline,
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+def _predict_best_configs(model: Any, pipe: PreprocessPipeline,
+                          dims: np.ndarray, cfgs: list[GemmConfig]
+                          ) -> np.ndarray:
+    """Predicted-argmin candidate index for every dim, shape (D,).
+
+    Delegates to the runtime tuner's own batched prediction so the
+    persisted warm-start choices are, by construction, exactly what the
+    tuner would compute for the same artifact.
+    """
+    from repro.core.tuner import AdsalaTuner  # local: breaks import cycle
+
+    tuner = AdsalaTuner(model, pipe, cfgs)
+    times = tuner.predicted_times_many(
+        [(int(m), int(k), int(n)) for m, k, n in np.asarray(dims)])
+    return np.argmin(times, axis=1)
+
+
 def _speedups(model: Any, pipe: PreprocessPipeline, data: GatheredData,
               test_dims_idx: np.ndarray, cfg: InstallConfig,
               eval_time_s: float
@@ -222,23 +234,15 @@ def _speedups(model: Any, pipe: PreprocessPipeline, data: GatheredData,
     """Ideal / cold-estimated / warm-estimated mean + aggregate speedups
     over held-out GEMM dims (paper §IV-D)."""
     cfgs = data.cfgs
-    C = len(cfgs)
     chips = np.asarray([c.n_chips for c in cfgs], dtype=np.float64)
-    tiles = np.asarray([c.tile_id for c in cfgs], dtype=np.float64)
-    parts = np.asarray([_PARTITIONS.index(c.partition) for c in cfgs],
-                       dtype=np.float64)
     try:
         j_default = cfgs.index(cfg.default_config)
     except ValueError:
         j_default = int(np.argmax(chips))
     t_orig = data.times[test_dims_idx, j_default]
-    t_chosen = np.empty(len(test_dims_idx))
-    for out_i, i in enumerate(test_dims_idx):
-        m, k, n = data.dims[i]
-        X = build_features(np.full(C, float(m)), np.full(C, float(k)),
-                           np.full(C, float(n)), chips, tiles, parts)
-        pred = model.predict(pipe.transform(X))
-        t_chosen[out_i] = data.times[i, int(np.argmin(pred))]
+    best_j = _predict_best_configs(model, pipe, data.dims[test_dims_idx],
+                                   cfgs)
+    t_chosen = data.times[test_dims_idx, best_j]
     ideal = t_orig / np.maximum(t_chosen, 1e-12)
     est = t_orig / np.maximum(t_chosen + eval_time_s, 1e-12)
     warm_eval = (1.0 - cfg.cache_hit_rate) * eval_time_s
@@ -328,6 +332,12 @@ def install(backend: TimingBackend | None = None,
 
     if artifact_dir is not None:
         os.makedirs(artifact_dir, exist_ok=True)
+        # Warm-start cache: the selected model's argmin choice for every
+        # sampled GEMM dim, computed in one batched predict at install
+        # time so the runtime tuner starts with a hot memo cache instead
+        # of paying t_eval on first sight of the trained-on shapes.
+        warm_best = _predict_best_configs(fitted[selected], pipe,
+                                          data.dims, data.cfgs)
         # paper Fig 2: "two files ... the configurations together with the
         # production-ready ML model"
         with open(os.path.join(artifact_dir, "config.json"), "w") as f:
@@ -348,6 +358,10 @@ def install(backend: TimingBackend | None = None,
                     "repeats": cfg.repeats, "seed": cfg.seed},
                 "selection": [r.to_dict() for r in reports],
                 "selected": selected,
+                "warm_start": {
+                    "dims": np.asarray(data.dims,
+                                       dtype=np.int64).tolist(),
+                    "best": warm_best.astype(int).tolist()},
             }, f, indent=1)
         with open(os.path.join(artifact_dir, "model.json"), "w") as f:
             json.dump(fitted[selected].to_dict(), f)

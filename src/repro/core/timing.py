@@ -24,16 +24,41 @@ from repro.core.costmodel import (
     DEFAULT_TILES,
     GemmConfig,
     TPUSpec,
+    estimate_batch_terms,
     estimate_gemm_time,
 )
 
-__all__ = ["TimingBackend", "SimulatedBackend", "MeasuredCPUBackend"]
+__all__ = ["TimingBackend", "SimulatedBackend", "MeasuredCPUBackend",
+           "time_gemm_grid"]
 
 
 class TimingBackend(Protocol):
     def time_gemm(self, m: int, k: int, n: int, cfg: GemmConfig) -> float:
         """One timed execution (seconds)."""
         ...
+
+
+def time_gemm_grid(backend: "TimingBackend", dims: np.ndarray,
+                   cfgs: list[GemmConfig], repeats: int) -> np.ndarray:
+    """Median-of-``repeats`` timing matrix, shape (D, C), for any backend.
+
+    Uses the backend's whole-grid batched path when it has one (the
+    simulated backend times every (dim x config) cell per call); falls
+    back to the scalar ``time_gemm`` loop for measured backends, where
+    each execution is genuinely sequential wall-clock.
+    """
+    batch = getattr(backend, "time_gemm_batch", None)
+    if batch is not None:
+        reps = np.stack([batch(dims, cfgs) for _ in range(repeats)])
+        return np.median(reps, axis=0)
+    dims = np.asarray(dims, dtype=np.int64)
+    times = np.empty((len(dims), len(cfgs)))
+    for i, (m, k, n) in enumerate(dims):
+        for j, c in enumerate(cfgs):
+            reps = [backend.time_gemm(int(m), int(k), int(n), c)
+                    for _ in range(repeats)]
+            times[i, j] = float(np.median(reps))
+    return times
 
 
 @dataclasses.dataclass
@@ -52,11 +77,29 @@ class SimulatedBackend:
                                   dtype_bytes=self.dtype_bytes,
                                   rng=self._rng).total_s
 
+    def time_gemm_batch(self, dims: np.ndarray,
+                        cfgs: list[GemmConfig]) -> np.ndarray:
+        """One noisy timing of every (dim x config) cell, shape (D, C).
+
+        A single vectorised pass over the grid — the batched analogue of
+        calling :meth:`time_gemm` D*C times, drawing noise from the same
+        backend stream.
+        """
+        return estimate_batch_terms(dims, cfgs, self.spec,
+                                    dtype_bytes=self.dtype_bytes,
+                                    rng=self._rng).total_s
+
     def time_gemm_clean(self, m: int, k: int, n: int,
                         cfg: GemmConfig) -> float:
         """Noise-free ground truth (used by benchmarks for ideal speedup)."""
         return estimate_gemm_time(m, k, n, cfg, self.spec,
                                   dtype_bytes=self.dtype_bytes).total_s
+
+    def time_gemm_clean_batch(self, dims: np.ndarray,
+                              cfgs: list[GemmConfig]) -> np.ndarray:
+        """Noise-free (D, C) ground-truth grid."""
+        return estimate_batch_terms(dims, cfgs, self.spec,
+                                    dtype_bytes=self.dtype_bytes).total_s
 
 
 @dataclasses.dataclass

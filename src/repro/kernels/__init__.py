@@ -11,6 +11,7 @@ from repro.kernels.matmul import matmul_pallas
 from repro.kernels.ops import (
     dispatch_hint,
     flash_attention,
+    grouped_dispatch_hint,
     grouped_matmul,
     matmul,
     resolve_backend,
@@ -24,6 +25,6 @@ from repro.kernels.ref import (
 __all__ = [
     "matmul_pallas", "grouped_matmul_pallas", "flash_attention_pallas",
     "matmul", "grouped_matmul", "flash_attention", "dispatch_hint",
-    "resolve_backend",
+    "grouped_dispatch_hint", "resolve_backend",
     "matmul_ref", "grouped_matmul_ref", "flash_attention_ref",
 ]

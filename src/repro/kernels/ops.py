@@ -32,12 +32,17 @@ from repro.kernels.grouped_matmul import grouped_matmul_pallas
 from repro.kernels.matmul import matmul_pallas
 
 __all__ = ["matmul", "grouped_matmul", "flash_attention", "dispatch_hint",
-           "resolve_backend"]
+           "grouped_dispatch_hint", "resolve_backend"]
 
 Backend = Literal["auto", "pallas", "xla"]
 
+_BACKENDS = ("auto", "pallas", "xla")
+
 
 def resolve_backend(backend: Backend = "auto") -> str:
+    if backend not in _BACKENDS:
+        raise ValueError(
+            f"unknown backend {backend!r}; expected one of {_BACKENDS}")
     if backend != "auto":
         return backend
     if os.environ.get("ADSALA_FORCE_PALLAS"):
@@ -61,6 +66,32 @@ def dispatch_hint(m: int, k: int, n: int,
     return tuner.select(m, k, n) if tuner is not None else None
 
 
+def grouped_dispatch_hint(shapes: list[tuple[int, int, int]],
+                          tuner: AdsalaTuner | None
+                          ) -> list[GemmConfig] | None:
+    """Per-expert worker configurations for a grouped (MoE) dispatch.
+
+    All expert GEMMs go through ONE batched tuner lookup
+    (:meth:`AdsalaTuner.select_many`) instead of per-expert scalar calls.
+    """
+    return tuner.select_many(shapes) if tuner is not None else None
+
+
+def _grouped_tile_for(shapes: list[tuple[int, int, int]],
+                      tuner: AdsalaTuner | None,
+                      tile: tuple[int, int, int] | None
+                      ) -> tuple[int, int, int]:
+    if tile is not None:
+        return tile
+    if tuner is not None:
+        cfgs = tuner.select_many(shapes)
+        # one kernel tile serves every expert; use the config chosen for
+        # the largest per-expert GEMM (the cost-dominant one)
+        big = max(range(len(shapes)), key=lambda i: shapes[i][0])
+        return cfgs[big].tile
+    return DEFAULT_TILES[3]  # (256, 256, 256)
+
+
 def matmul(a: jax.Array, b: jax.Array, *,
            tuner: AdsalaTuner | None = None,
            tile: tuple[int, int, int] | None = None,
@@ -78,12 +109,34 @@ def matmul(a: jax.Array, b: jax.Array, *,
 def grouped_matmul(x: jax.Array, w: jax.Array, *,
                    tuner: AdsalaTuner | None = None,
                    tile: tuple[int, int, int] | None = None,
+                   group_sizes: list[int] | None = None,
                    backend: Backend = "auto",
                    interpret: bool | None = None) -> jax.Array:
+    """Y[e] = X[e] @ W[e] with tuner-selected tiling.
+
+    ``group_sizes`` (actual tokens routed per expert, <= capacity) refines
+    the per-expert GEMM shapes the tuner sees; with or without it, all E
+    experts resolve through a single batched ``select_many`` lookup.
+    """
     be = resolve_backend(backend)
+    e, c, d = x.shape
+    f = w.shape[2]
+    if group_sizes is not None:
+        if len(group_sizes) != e:
+            raise ValueError(
+                f"group_sizes has {len(group_sizes)} entries for {e} "
+                "experts")
+        if any(g < 0 or g > c for g in group_sizes):
+            raise ValueError(
+                f"group_sizes {list(group_sizes)} outside [0, capacity="
+                f"{c}]")
     if be == "xla":
         return ref.grouped_matmul_ref(x, w)
-    bm, bk, bn = _tile_for(x.shape[1], x.shape[2], w.shape[2], tuner, tile)
+    # an expert with zero routed tokens still runs its capacity bucket;
+    # query the tuner with at least one row so the shape stays sensible
+    shapes = ([(max(int(g), 1), d, f) for g in group_sizes]
+              if group_sizes is not None else [(c, d, f)] * e)
+    bm, bk, bn = _grouped_tile_for(shapes, tuner, tile)
     interp = (jax.default_backend() != "tpu") if interpret is None \
         else interpret
     return grouped_matmul_pallas(x, w, bm=bm, bk=bk, bn=bn, interpret=interp)

@@ -101,3 +101,83 @@ def test_matmul_rejects_bad_shapes():
     with pytest.raises(ValueError):
         matmul_pallas(_arr((4, 8), jnp.float32), _arr((9, 4), jnp.float32),
                       interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# dispatch layer (repro.kernels.ops)
+# ---------------------------------------------------------------------------
+
+def test_resolve_backend_validates_names():
+    from repro.kernels import resolve_backend
+    assert resolve_backend("pallas") == "pallas"
+    assert resolve_backend("xla") == "xla"
+    assert resolve_backend("auto") in ("pallas", "xla")
+    for bad in ("palas", "PALLAS", "cuda", ""):
+        with pytest.raises(ValueError, match="unknown backend"):
+            resolve_backend(bad)
+
+
+def test_ops_reject_unknown_backend():
+    from repro.kernels import matmul
+    a = _arr((16, 16), jnp.float32)
+    with pytest.raises(ValueError, match="unknown backend"):
+        matmul(a, a, backend="palas")
+
+
+def _stub_tuner():
+    from repro.core import AdsalaTuner, candidate_configs
+
+    class _Model:
+        def predict(self, X):
+            return np.log(1e-6 * (X[:, 3] + 1e-3 * X[:, 0]))
+
+    class _Pipe:
+        def transform(self, X):
+            return X
+
+    return AdsalaTuner(_Model(), _Pipe(), candidate_configs(8, tiles=(0,)))
+
+
+def test_grouped_matmul_single_batched_tuner_lookup():
+    """All experts resolve through ONE select_many evaluation."""
+    from repro.kernels import grouped_matmul, grouped_matmul_ref
+    tuner = _stub_tuner()
+    x, w = _arr((4, 32, 16), jnp.float32), _arr((4, 16, 24), jnp.float32)
+    out = grouped_matmul(x, w, tuner=tuner, backend="pallas",
+                         interpret=True)
+    assert tuner.stats["calls"] == 4          # one per expert shape...
+    assert tuner.stats["evaluations"] == 1    # ...but a single evaluation
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(grouped_matmul_ref(x, w)),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_grouped_matmul_group_sizes_refine_shapes():
+    from repro.kernels import grouped_matmul
+    tuner = _stub_tuner()
+    x, w = _arr((3, 32, 16), jnp.float32), _arr((3, 16, 24), jnp.float32)
+    grouped_matmul(x, w, tuner=tuner, group_sizes=[32, 8, 1],
+                   backend="pallas", interpret=True)
+    assert tuner.stats["calls"] == 3
+    assert tuner.stats["evaluations"] == 3    # three distinct shapes
+    assert (32, 16, 24) in tuner._cache
+
+
+def test_grouped_matmul_validates_group_sizes():
+    from repro.kernels import grouped_matmul
+    x, w = _arr((3, 32, 16), jnp.float32), _arr((3, 16, 24), jnp.float32)
+    with pytest.raises(ValueError, match="entries for"):
+        grouped_matmul(x, w, group_sizes=[32, 8], backend="xla")
+    with pytest.raises(ValueError, match="outside"):
+        grouped_matmul(x, w, group_sizes=[32, 8, -1], backend="xla")
+    with pytest.raises(ValueError, match="outside"):
+        grouped_matmul(x, w, group_sizes=[32, 8, 33], backend="xla")
+
+
+def test_grouped_dispatch_hint_uses_select_many():
+    from repro.kernels import grouped_dispatch_hint
+    tuner = _stub_tuner()
+    hints = grouped_dispatch_hint([(64, 32, 32)] * 5, tuner)
+    assert len(hints) == 5 and len(set(hints)) == 1
+    assert tuner.stats["evaluations"] == 1
+    assert grouped_dispatch_hint([(64, 32, 32)], None) is None

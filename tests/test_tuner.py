@@ -1,0 +1,175 @@
+"""AdsalaTuner LRU memoisation, batched selection and warm-start cache."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AdsalaTuner,
+    GemmConfig,
+    InstallConfig,
+    SimulatedBackend,
+    candidate_configs,
+    install,
+)
+
+
+class _StubModel:
+    """Deterministic 'runtime' model: log-time grows with chip count and
+    with m, so the argmin is always the fewest-chips candidate."""
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        # X columns follow FEATURE_NAMES: 0=m, 3=n_workers
+        return np.log(1e-6 * (X[:, 3] + 1e-3 * X[:, 0]))
+
+
+class _IdentityPipe:
+    def transform(self, X: np.ndarray) -> np.ndarray:
+        return X
+
+
+def _tuner(**kw) -> AdsalaTuner:
+    return AdsalaTuner(_StubModel(), _IdentityPipe(),
+                       candidate_configs(64, tiles=(0, 3)), **kw)
+
+
+def test_select_returns_min_chip_candidate():
+    t = _tuner()
+    cfg = t.select(512, 512, 512)
+    assert cfg.n_chips == min(c.n_chips for c in t.candidates)
+
+
+def test_lru_eviction_at_cache_size():
+    t = _tuner(cache_size=4)
+    shapes = [(64 * i, 64, 64) for i in range(1, 6)]
+    for s in shapes:
+        t.select(*s)
+    assert len(t._cache) == 4
+    assert (64, 64, 64) not in t._cache          # oldest evicted
+    # re-selecting the evicted shape is a miss -> new evaluation
+    before = t.stats["evaluations"]
+    t.select(64, 64, 64)
+    assert t.stats["evaluations"] == before + 1
+
+
+def test_lru_move_to_end_recency():
+    t = _tuner(cache_size=3)
+    a, b, c, d = (64, 64, 64), (128, 64, 64), (192, 64, 64), (256, 64, 64)
+    for s in (a, b, c):
+        t.select(*s)
+    t.select(*a)                                  # refresh a's recency
+    t.select(*d)                                  # evicts b, not a
+    assert a in t._cache and b not in t._cache
+    assert list(t._cache) == [c, a, d]
+
+
+def test_stats_counters():
+    t = _tuner()
+    t.select(64, 64, 64)
+    t.select(64, 64, 64)
+    t.select(128, 64, 64)
+    assert t.stats == {"calls": 3, "cache_hits": 1, "evaluations": 2}
+
+
+def test_select_with_times_consistency():
+    t = _tuner()
+    cfg, times = t.select_with_times(512, 256, 128)
+    assert len(times) == len(t.candidates)
+    assert t.candidates[int(np.argmin(times))] == cfg
+    cfg2, times2 = t.select_with_times(512, 256, 128)
+    assert cfg2 == cfg
+    np.testing.assert_array_equal(times, times2)
+    np.testing.assert_allclose(times, t.predicted_times(512, 256, 128))
+
+
+def test_select_many_matches_scalar_selects():
+    shapes = [(64, 64, 64), (512, 512, 512), (64, 2048, 64),
+              (64, 64, 64)]
+    batched = _tuner().select_many(shapes)
+    scalar = [_tuner().select(*s) for s in shapes]
+    assert batched == scalar
+
+
+def test_select_many_stats_one_evaluation_per_unique_shape():
+    t = _tuner()
+    shapes = [(64, 64, 64)] * 3 + [(128, 64, 64)]
+    t.select_many(shapes)
+    assert t.stats == {"calls": 4, "cache_hits": 2, "evaluations": 2}
+    t.select_many(shapes)                         # all cached now
+    assert t.stats == {"calls": 8, "cache_hits": 6, "evaluations": 2}
+
+
+def test_predicted_times_many_empty():
+    t = _tuner()
+    out = t.predicted_times_many([])
+    assert out.shape == (0, len(t.candidates))
+    assert t.select_many([]) == []
+
+
+def test_select_many_respects_cache_size():
+    t = _tuner(cache_size=2)
+    t.select_many([(64 * i, 64, 64) for i in range(1, 6)])
+    assert len(t._cache) == 2
+
+
+def test_manual_warm_start_hits_without_evaluation():
+    t = _tuner()
+    cfg = t.candidates[0]
+    t.warm_start([((64, 64, 64), cfg)])
+    assert t.select(64, 64, 64) == cfg
+    assert t.stats == {"calls": 1, "cache_hits": 1, "evaluations": 0}
+
+
+def test_warm_start_times_recomputed_lazily():
+    t = _tuner()
+    # the stub model's true choice for this shape, from a scratch tuner
+    expect = _tuner().select(64, 64, 64)
+    t.warm_start([((64, 64, 64), expect)])
+    cfg, times = t.select_with_times(64, 64, 64)
+    assert cfg == expect
+    assert t.candidates[int(np.argmin(times))] == cfg
+
+
+@pytest.fixture(scope="module")
+def small_artifact(tmp_path_factory):
+    d = tmp_path_factory.mktemp("tuner_artifact")
+    cfg = InstallConfig(n_samples=30, repeats=2, tile_ids=(0, 3),
+                        models=("linear_regression",),
+                        grid_budget="small", cv_splits=3, seed=0)
+    backend = SimulatedBackend(seed=0)
+    install(backend, cfg, artifact_dir=str(d))
+    return d
+
+
+def test_artifact_warm_start_round_trip(small_artifact):
+    import json
+    ws = json.load(open(small_artifact / "config.json"))["warm_start"]
+    assert len(ws["dims"]) == 30 and len(ws["best"]) == 30
+
+    tuner = AdsalaTuner.from_artifact(str(small_artifact))
+    assert len(tuner._cache) == 30
+    m, k, n = ws["dims"][0]
+    cfg = tuner.select(m, k, n)
+    assert tuner.stats == {"calls": 1, "cache_hits": 1, "evaluations": 0}
+    assert isinstance(cfg, GemmConfig)
+    # the persisted choice must equal what a cold tuner would compute
+    cold = AdsalaTuner.from_artifact(str(small_artifact))
+    cold._cache.clear()
+    assert cold.select(m, k, n) == cfg
+
+
+def test_artifact_warm_start_skipped_when_candidates_filtered(
+        small_artifact):
+    tuner = AdsalaTuner.from_artifact(str(small_artifact), max_chips=8)
+    assert len(tuner._cache) == 0
+    assert all(c.n_chips <= 8 for c in tuner.candidates)
+
+
+def test_artifact_warm_start_grows_default_cache(small_artifact):
+    """A warm set larger than the default cache must survive intact
+    (the default install budget, 400 dims, exceeds cache_size=256);
+    an explicitly requested cache_size still wins."""
+    auto = AdsalaTuner.from_artifact(str(small_artifact))
+    assert auto.cache_size >= 30 and len(auto._cache) == 30
+
+    capped = AdsalaTuner.from_artifact(str(small_artifact), cache_size=10)
+    assert capped.cache_size == 10 and len(capped._cache) == 10
