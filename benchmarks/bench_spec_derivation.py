@@ -1,0 +1,62 @@
+"""Spec-derivation latency: partition_params + batch_specs across the
+full 10-arch zoo x both production meshes.
+
+Spec derivation runs on the serving cold-start path (every new
+(arch x mesh) cell derives its rule table + param/batch specs before the
+first compile), so regressions here stretch time-to-first-token.  Uses
+AbstractMesh stand-ins — no devices needed, same code path the real
+launchers hit.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.configs import ARCH_IDS, build_model, get_config
+from repro.dist.sharding import abstract_mesh, batch_specs, partition_params
+from repro.models.config import SHAPES
+
+MESHES = {
+    "single": {"data": 16, "model": 16},
+    "multi": {"pod": 2, "data": 16, "model": 16},
+}
+
+
+def _time(fn, repeats: int = 5) -> float:
+    """Best-of-repeats wall time in seconds (cold-start metric: min is
+    the least noisy estimator on a busy 2-core box)."""
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run():
+    shape = SHAPES["train_4k"]
+    total_param_us = 0.0
+    total_batch_us = 0.0
+    for mesh_name, mesh_shape in MESHES.items():
+        mesh = abstract_mesh(mesh_shape)
+        for arch in ARCH_IDS:
+            cfg = get_config(arch)
+            model = build_model(cfg)
+            t_param = _time(lambda: partition_params(model, cfg, mesh))
+            t_batch = _time(lambda: batch_specs(cfg, shape, mesh))
+            total_param_us += t_param * 1e6
+            total_batch_us += t_batch * 1e6
+            yield (f"spec_partition_params_{arch}_{mesh_name},"
+                   f"{t_param * 1e6:.0f},us")
+            yield (f"spec_batch_specs_{arch}_{mesh_name},"
+                   f"{t_batch * 1e6:.0f},us")
+    n = len(ARCH_IDS) * len(MESHES)
+    yield (f"spec_partition_params_mean,{total_param_us / n:.0f},"
+           f"mean_over_{n}_cells")
+    yield (f"spec_batch_specs_mean,{total_batch_us / n:.0f},"
+           f"mean_over_{n}_cells")
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

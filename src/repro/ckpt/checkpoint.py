@@ -26,6 +26,8 @@ import jax
 import numpy as np
 from jax.sharding import NamedSharding
 
+from repro.dist.sharding import is_partition_spec
+
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
            "AsyncCheckpointer"]
 
@@ -85,10 +87,9 @@ def restore_checkpoint(directory: str, step: int, like: Any, *,
     z = np.load(os.path.join(path, "arrays.npz"))
     flat, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
-    spec_leaves = (jax.tree_util.tree_leaves(
-        specs, is_leaf=lambda s: hasattr(s, "_normalized_spec")
-        or s.__class__.__name__ == "PartitionSpec")
-        if specs is not None else [None] * len(flat))
+    spec_leaves = (jax.tree_util.tree_leaves(specs,
+                                             is_leaf=is_partition_spec)
+                   if specs is not None else [None] * len(flat))
     for (path_k, leaf), spec in zip(flat, spec_leaves):
         key = _SEP.join(str(p) for p in path_k)
         arr = z[key]

@@ -22,8 +22,8 @@ from typing import Any
 
 import numpy as np
 
-__all__ = ["TreeArrays", "build_tree", "tree_predict", "PackedEnsemble",
-           "DecisionTreeRegressor"]
+__all__ = ["TreeArrays", "build_tree", "tree_predict", "tree_predict_row",
+           "PackedEnsemble", "DecisionTreeRegressor"]
 
 
 @dataclasses.dataclass
@@ -60,7 +60,6 @@ class TreeArrays:
 
 def _tree_depth(tree: TreeArrays) -> int:
     """Depth of a TreeArrays (root = depth 0)."""
-    depth = np.zeros(tree.n_nodes, dtype=np.int64)
     best = 0
     stack = [(0, 0)]
     while stack:
@@ -69,7 +68,6 @@ def _tree_depth(tree: TreeArrays) -> int:
         if tree.feature[node] >= 0:
             stack.append((int(tree.left[node]), d + 1))
             stack.append((int(tree.right[node]), d + 1))
-    del depth
     return best
 
 
@@ -193,21 +191,32 @@ class PackedEnsemble:
         right = np.concatenate(
             [t.right + o for t, o in zip(trees, offsets)]).astype(np.intp)
         # self-looping leaves: feature 0, threshold +inf, children = self —
-        # lets the descent run a fixed depth with no interior-mask checks.
+        # a lane that lands on a leaf stays put if it is ever walked again.
         leaf = feature < 0
         self_idx = np.arange(len(feature), dtype=np.intp)
+        self.interior = ~leaf
         self.feature = np.where(leaf, 0, feature)
         self.threshold = np.where(leaf, np.inf, threshold)
         self.left = np.where(leaf, self_idx, left)
         self.right = np.where(leaf, self_idx, right)
-        self.max_depth = max(_tree_depth(t) for t in trees)
+        depths = [_tree_depth(t) for t in trees]
+        self.min_depth = min(depths)
+        self.max_depth = max(depths)
 
     def predict_all(self, X: np.ndarray) -> np.ndarray:
         """Per-tree predictions, shape (n_samples, n_trees).
 
-        Flat ``take``-based descent: every (sample, tree) pair walks one
-        level per iteration; leaves self-loop, so exactly ``max_depth``
-        iterations complete all walks with 4 gathers + 1 compare each.
+        Flat ``take``-based descent: every (sample, tree) pair is one
+        lane walking one level per iteration with 4 gathers + 1 compare.
+        The first ``min_depth`` levels run mask-free over all n*T lanes
+        — exact even when a lane hits a shallow leaf early, because
+        leaves self-loop.  Past ``min_depth`` (where whole trees start
+        finishing) lanes sitting on a leaf are retired from the working
+        set, so the deep tail levels (set by the single deepest tree)
+        touch a shrinking fraction of the lanes.  Balanced ensembles
+        keep the mask-free walk end-to-end; mixed-depth ones (AdaBoost
+        stumps next to full CARTs, leaf-wise LightGBM trees) skip most
+        of the tail work.
         """
         X = np.ascontiguousarray(X, dtype=np.float64)
         n, f_dim = X.shape
@@ -215,12 +224,23 @@ class PackedEnsemble:
         node = np.tile(self.roots, n)                       # (n*T,) flat
         row_off = np.repeat(np.arange(n, dtype=np.intp) * f_dim, T)
         x_flat = X.ravel()
-        for _ in range(self.max_depth):
+        for _ in range(self.min_depth):
             f = self.feature.take(node)
             fv = x_flat.take(row_off + f)
             go_left = fv <= self.threshold.take(node)
             node = np.where(go_left, self.left.take(node),
                             self.right.take(node))
+        lanes = np.flatnonzero(self.interior.take(node))
+        for _ in range(self.max_depth - self.min_depth):
+            if not lanes.size:
+                break
+            at = node.take(lanes)
+            f = self.feature.take(at)
+            fv = x_flat.take(row_off.take(lanes) + f)
+            go_left = fv <= self.threshold.take(at)
+            at = np.where(go_left, self.left.take(at), self.right.take(at))
+            node[lanes] = at
+            lanes = lanes[self.interior.take(at)]
         return self.value.take(node).reshape(n, T)
 
     def predict_sum(self, X: np.ndarray) -> np.ndarray:
@@ -245,6 +265,19 @@ def tree_predict(tree: TreeArrays, X: np.ndarray) -> np.ndarray:
         node[active] = nxt
         active = tree.feature[node] >= 0
     return tree.value[node]
+
+
+def tree_predict_row(tree: TreeArrays, x: np.ndarray) -> float:
+    """Scalar one-row descent — the reference the vectorised walkers
+    (``tree_predict``, ``PackedEnsemble.predict_all``) are parity-tested
+    against."""
+    node = 0
+    while tree.feature[node] >= 0:
+        if x[tree.feature[node]] <= tree.threshold[node]:
+            node = int(tree.left[node])
+        else:
+            node = int(tree.right[node])
+    return float(tree.value[node])
 
 
 class DecisionTreeRegressor:

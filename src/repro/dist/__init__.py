@@ -1,0 +1,25 @@
+"""Distribution layer: logical-axis sharding rules + spec derivation."""
+
+from repro.dist.sharding import (
+    DATA_AXIS_RULES,
+    MODEL_AXIS_RULES,
+    TP_AXIS,
+    abstract_mesh,
+    auto_spec,
+    batch_specs,
+    data_axes,
+    divisible_axes,
+    is_partition_spec,
+    logical_axis_dims,
+    named_shardings,
+    param_rules,
+    partition_params,
+    state_specs,
+)
+
+__all__ = [
+    "DATA_AXIS_RULES", "MODEL_AXIS_RULES", "TP_AXIS", "abstract_mesh",
+    "auto_spec", "batch_specs", "data_axes", "divisible_axes",
+    "is_partition_spec", "logical_axis_dims", "named_shardings",
+    "param_rules", "partition_params", "state_specs",
+]

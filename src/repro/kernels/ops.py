@@ -45,6 +45,12 @@ def resolve_backend(backend: Backend = "auto") -> str:
             f"unknown backend {backend!r}; expected one of {_BACKENDS}")
     if backend != "auto":
         return backend
+    env = os.environ.get("ADSALA_BACKEND")
+    if env:
+        if env not in ("pallas", "xla"):
+            raise ValueError(
+                f"ADSALA_BACKEND={env!r}; expected 'pallas' or 'xla'")
+        return env
     if os.environ.get("ADSALA_FORCE_PALLAS"):
         return "pallas"
     return "pallas" if jax.default_backend() == "tpu" else "xla"
@@ -67,13 +73,22 @@ def dispatch_hint(m: int, k: int, n: int,
 
 
 def grouped_dispatch_hint(shapes: list[tuple[int, int, int]],
-                          tuner: AdsalaTuner | None
+                          tuner: AdsalaTuner | None, *,
+                          n_experts: int | None = None
                           ) -> list[GemmConfig] | None:
     """Per-expert worker configurations for a grouped (MoE) dispatch.
 
     All expert GEMMs go through ONE batched tuner lookup
     (:meth:`AdsalaTuner.select_many`) instead of per-expert scalar calls.
+    ``n_experts`` (when known) guards against a shape list covering only
+    a prefix of the experts — a silent truncation would hand later
+    experts no hint at all.
     """
+    shapes = list(shapes)
+    if n_experts is not None and len(shapes) != n_experts:
+        raise ValueError(
+            f"grouped dispatch got {len(shapes)} GEMM shapes for "
+            f"{n_experts} experts; every expert needs a shape")
     return tuner.select_many(shapes) if tuner is not None else None
 
 
@@ -83,11 +98,15 @@ def _grouped_tile_for(shapes: list[tuple[int, int, int]],
                       ) -> tuple[int, int, int]:
     if tile is not None:
         return tile
+    if not shapes:
+        raise ValueError("grouped dispatch needs at least one GEMM shape")
     if tuner is not None:
         cfgs = tuner.select_many(shapes)
         # one kernel tile serves every expert; use the config chosen for
-        # the largest per-expert GEMM (the cost-dominant one)
-        big = max(range(len(shapes)), key=lambda i: shapes[i][0])
+        # the cost-dominant per-expert GEMM (largest m*k*n, not just m —
+        # hint shapes may be heterogeneous in every dim)
+        big = max(range(len(shapes)),
+                  key=lambda i: shapes[i][0] * shapes[i][1] * shapes[i][2])
         return cfgs[big].tile
     return DEFAULT_TILES[3]  # (256, 256, 256)
 
@@ -122,14 +141,15 @@ def grouped_matmul(x: jax.Array, w: jax.Array, *,
     e, c, d = x.shape
     f = w.shape[2]
     if group_sizes is not None:
+        group_sizes = [int(g) for g in group_sizes]
         if len(group_sizes) != e:
             raise ValueError(
                 f"group_sizes has {len(group_sizes)} entries for {e} "
-                "experts")
+                "experts; a prefix is not allowed — pass one size per "
+                "expert (0 for an idle expert)")
         if any(g < 0 or g > c for g in group_sizes):
             raise ValueError(
-                f"group_sizes {list(group_sizes)} outside [0, capacity="
-                f"{c}]")
+                f"group_sizes {group_sizes} outside [0, capacity={c}]")
     if be == "xla":
         return ref.grouped_matmul_ref(x, w)
     # an expert with zero routed tokens still runs its capacity bucket;

@@ -23,9 +23,9 @@ import time
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCH_IDS, build_model, get_config
+from repro.dist.sharding import named_shardings
 from repro.launch.mesh import make_production_mesh
 from repro.models.config import SHAPES, ShapeSpec
 from repro.serve.step import (
@@ -125,21 +125,17 @@ def build_cell(arch: str, shape_name: str, mesh):
             model, cfg, shape, mesh, AdamWConfig())
         state_sds = abstract_state(model, cfg, AdamWConfig(), _DTYPE)
         batch_sds = train_batch_sds(cfg, shape, _DTYPE)
-        in_shardings = (
-            jax.tree.map(lambda s: NamedSharding(mesh, s), s_specs),
-            jax.tree.map(lambda s: NamedSharding(mesh, s), b_specs))
-        out_shardings = (
-            jax.tree.map(lambda s: NamedSharding(mesh, s), s_specs),
-            None)
+        in_shardings = (named_shardings(mesh, s_specs),
+                        named_shardings(mesh, b_specs))
+        out_shardings = (named_shardings(mesh, s_specs), None)
         args = (state_sds, batch_sds)
     elif shape.kind == "prefill":
         fn, p_specs, b_specs = build_prefill(model, cfg, shape, mesh)
         from repro.models.params import abstract_params
         params_sds = abstract_params(model.defs, _DTYPE)
         batch_sds = prefill_batch_sds(cfg, shape, _DTYPE)
-        in_shardings = (
-            jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs),
-            jax.tree.map(lambda s: NamedSharding(mesh, s), b_specs))
+        in_shardings = (named_shardings(mesh, p_specs),
+                        named_shardings(mesh, b_specs))
         out_shardings = None
         args = (params_sds, batch_sds)
     else:  # decode
@@ -149,14 +145,11 @@ def build_cell(arch: str, shape_name: str, mesh):
         token_sds, cache_sds_, pos_sds = decode_inputs_sds(
             model, cfg, shape, _DTYPE)
         t_spec, c_specs, pos_spec = io_specs
-        in_shardings = (
-            jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs),
-            NamedSharding(mesh, t_spec),
-            jax.tree.map(lambda s: NamedSharding(mesh, s), c_specs),
-            NamedSharding(mesh, pos_spec))
-        out_shardings = (
-            None,
-            jax.tree.map(lambda s: NamedSharding(mesh, s), c_specs))
+        in_shardings = (named_shardings(mesh, p_specs),
+                        named_shardings(mesh, t_spec),
+                        named_shardings(mesh, c_specs),
+                        named_shardings(mesh, pos_spec))
+        out_shardings = (None, named_shardings(mesh, c_specs))
         args = (params_sds, token_sds, cache_sds_, pos_sds)
     return cfg, model, fn, args, in_shardings, out_shardings
 

@@ -14,7 +14,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.dist.sharding import auto_spec, batch_specs, partition_params
+from repro.dist.sharding import (
+    auto_spec,
+    batch_specs,
+    data_axes,
+    divisible_axes,
+    partition_params,
+)
 from repro.models.config import ArchConfig, ShapeSpec
 from repro.train.step import make_ctx
 
@@ -101,10 +107,6 @@ def build_decode(model, cfg: ArchConfig, shape: ShapeSpec, mesh):
     p_specs = partition_params(model, cfg, mesh)
     cache_abs = cache_sds(model, cfg, shape)
     c_specs = cache_specs(cache_abs, mesh)
-    b = shape.global_batch
-    dp = tuple(a for a in mesh.axis_names if a != "model")
-    dp_size = 1
-    for a in dp:
-        dp_size *= mesh.shape[a]
-    t_spec = P(dp if b % dp_size == 0 else None, None)
+    t_spec = P(divisible_axes(shape.global_batch, data_axes(mesh), mesh),
+               None)
     return decode, p_specs, (t_spec, c_specs, P())

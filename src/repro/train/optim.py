@@ -14,9 +14,15 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-__all__ = ["AdamWConfig", "init_state", "adamw_update", "cosine_lr",
-           "clip_by_global_norm", "compress_int8", "decompress_int8",
-           "compressed_grads"]
+__all__ = ["AdamWConfig", "STATE_MOMENTS", "init_state", "adamw_update",
+           "cosine_lr", "clip_by_global_norm", "compress_int8",
+           "decompress_int8", "compressed_grads"]
+
+#: moment keys of the AdamW state dict.  The sharding layer
+#: (repro.dist.sharding.state_specs) and the abstract-state builder
+#: (repro.train.step.abstract_state) mirror the param tree onto exactly
+#: these keys, so a layout change here propagates mechanically.
+STATE_MOMENTS = ("m", "v")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,13 +49,16 @@ def cosine_lr(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
 
 
 def init_state(params: Any, cfg: AdamWConfig | None = None) -> dict:
-    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
-                         params)
-    state = {"params": params, "m": zeros,
-             "v": jax.tree.map(jnp.copy, zeros),
-             "step": jnp.zeros((), jnp.int32)}
+    def zeros() -> Any:
+        return jax.tree.map(
+            lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+    state: dict = {"params": params}
+    for key in STATE_MOMENTS:
+        state[key] = zeros()
+    state["step"] = jnp.zeros((), jnp.int32)
     if cfg is not None and cfg.compress:
-        state["ef"] = jax.tree.map(jnp.copy, zeros)
+        state["ef"] = zeros()
     return state
 
 

@@ -18,7 +18,12 @@ from jax.sharding import PartitionSpec as P
 from repro.dist.sharding import batch_specs, partition_params, state_specs
 from repro.models.config import ArchConfig, ShapeSpec
 from repro.models.transformer import Ctx
-from repro.train.optim import AdamWConfig, adamw_update, init_state
+from repro.train.optim import (
+    STATE_MOMENTS,
+    AdamWConfig,
+    adamw_update,
+    init_state,
+)
 
 __all__ = ["build_train_step", "make_ctx", "abstract_state",
            "train_batch_sds"]
@@ -44,11 +49,12 @@ def abstract_state(model, cfg: ArchConfig, opt_cfg: AdamWConfig,
     p = abstract_params(model.defs, dtype)
     f32 = jax.tree.map(
         lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), p)
-    state = {"params": p, "m": f32,
-             "v": jax.tree.map(lambda s: s, f32),
-             "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    state = {"params": p}
+    for key in STATE_MOMENTS:
+        state[key] = f32
+    state["step"] = jax.ShapeDtypeStruct((), jnp.int32)
     if opt_cfg.compress:
-        state["ef"] = jax.tree.map(lambda s: s, f32)
+        state["ef"] = f32
     return state
 
 
@@ -82,9 +88,7 @@ def build_train_step(model, cfg: ArchConfig, shape: ShapeSpec, mesh,
     if mesh is None:
         return train_step, None, None
     p_specs = partition_params(model, cfg, mesh)
-    s_specs = state_specs(p_specs)
-    if opt_cfg.compress:
-        s_specs["ef"] = p_specs
+    s_specs = state_specs(p_specs, compress=opt_cfg.compress)
     b_specs = batch_specs(cfg, shape, mesh)
     return train_step, s_specs, b_specs
 

@@ -1,0 +1,175 @@
+"""Unit tests for the repro.dist sharding subsystem itself: divisibility
+demotion, tuple-axis specs, state-spec mirroring, spec validity."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, build_model, get_config
+from repro.dist.sharding import (
+    abstract_mesh,
+    auto_spec,
+    batch_specs,
+    data_axes,
+    divisible_axes,
+    is_partition_spec,
+    logical_axis_dims,
+    param_rules,
+    partition_params,
+    state_specs,
+)
+from repro.models.config import SHAPES
+from repro.models.params import ParamDef
+
+SINGLE = abstract_mesh({"data": 16, "model": 16})
+MULTI = abstract_mesh({"pod": 2, "data": 16, "model": 16})
+
+
+# ---------------------------------------------------------------------------
+# divisibility demotion
+# ---------------------------------------------------------------------------
+
+def test_divisible_axes_demotes_outermost_first():
+    # 48 % (pod*data = 32) != 0 but 48 % 16 == 0 -> demote to "data"
+    assert divisible_axes(48, ("pod", "data"), MULTI) == "data"
+    # 24 divides neither 32 nor 16 -> None
+    assert divisible_axes(24, ("pod", "data"), MULTI) is None
+    # full tuple survives when it divides
+    assert divisible_axes(64, ("pod", "data"), MULTI) == ("pod", "data")
+    # single-axis candidates demote straight to None
+    assert divisible_axes(51865, ("model",), SINGLE) is None
+    # every dim carrying the axis must divide, not just one
+    assert divisible_axes({64, 24}, ("pod", "data"), MULTI) is None
+
+
+def test_param_rules_demote_per_arch():
+    # mixtral: 8 experts on a 16-way data axis -> replicated
+    rules = param_rules(get_config("mixtral-8x22b"), SINGLE)
+    assert rules["experts"] is None
+    assert rules["expert_ff"] == "model"
+    # deepseek: 160 experts divide pod*data=32 -> tuple-axis rule
+    rules = param_rules(get_config("deepseek-v2-236b"), MULTI)
+    assert rules["experts"] == ("pod", "data")
+    # whisper's 51865 vocab divides nothing -> replicated
+    rules = param_rules(get_config("whisper-tiny"), SINGLE)
+    assert rules["vocab"] is None
+
+
+def test_param_rules_on_tiny_mesh_adapt():
+    """The same arch demotes differently on a small host mesh."""
+    mesh = abstract_mesh({"data": 2, "model": 4})
+    rules = param_rules(get_config("mixtral-8x22b"), mesh)
+    assert rules["experts"] == "data"          # 8 % 2 == 0
+    assert rules["heads"] == "model"
+
+
+# ---------------------------------------------------------------------------
+# spec validity across the zoo (no duplicate mesh axes, all entries real)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mesh", [SINGLE, MULTI], ids=["single", "multi"])
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_have_no_duplicate_mesh_axes(arch, mesh):
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    specs = partition_params(model, cfg, mesh)
+    for spec in jax.tree.leaves(specs, is_leaf=is_partition_spec):
+        flat = []
+        for entry in tuple(spec):
+            if entry is None:
+                continue
+            flat.extend(entry if isinstance(entry, tuple) else (entry,))
+        assert len(flat) == len(set(flat)), f"{arch}: duplicate in {spec}"
+        assert all(a in mesh.axis_names for a in flat), spec
+
+
+# ---------------------------------------------------------------------------
+# auto_spec
+# ---------------------------------------------------------------------------
+
+def test_auto_spec_batch_demotes_on_pod_mesh():
+    # batch 16 does not divide pod*data=32 but divides data=16
+    s = auto_spec((16, 4096, 8, 128), MULTI, batch_dim=0)
+    assert tuple(s)[0] == "data"
+    # batch 64 keeps the full tuple
+    s = auto_spec((64, 4096, 8, 128), MULTI, batch_dim=0)
+    assert tuple(s)[0] == ("pod", "data")
+
+
+def test_auto_spec_model_axis_prefers_largest_divisible():
+    s = auto_spec((128, 1000, 512, 256), SINGLE, batch_dim=0)
+    # 1000 % 16 != 0; 512 is the largest divisible remaining dim
+    assert tuple(s) == ("data", None, "model", None)
+
+
+def test_auto_spec_without_model_axis():
+    mesh = abstract_mesh({"data": 8})
+    s = auto_spec((64, 4096), mesh, batch_dim=0)
+    assert tuple(s) == ("data", None)
+
+
+# ---------------------------------------------------------------------------
+# batch_specs / state_specs
+# ---------------------------------------------------------------------------
+
+def test_batch_specs_match_batch_sds_keys():
+    from repro.train.step import train_batch_sds
+    from repro.serve.step import prefill_batch_sds
+
+    cfg = get_config("whisper-tiny")
+    train = batch_specs(cfg, SHAPES["train_4k"], MULTI)
+    sds = train_batch_sds(cfg, SHAPES["train_4k"])
+    assert set(train) == set(sds)
+    assert tuple(train["tokens"]) == (("pod", "data"), None)  # 256 % 32 == 0
+    prefill = batch_specs(cfg, SHAPES["prefill_32k"], SINGLE)
+    assert set(prefill) == set(prefill_batch_sds(cfg, SHAPES["prefill_32k"]))
+    assert "labels" not in prefill
+
+
+def test_batch_specs_single_sequence_replicates():
+    cfg = get_config("xlstm-125m")
+    specs = batch_specs(cfg, SHAPES["long_500k"], SINGLE)  # batch = 1
+    assert tuple(specs["tokens"]) == (None, None)
+
+
+def test_state_specs_mirror_param_specs_for_both_moments():
+    cfg = get_config("granite-8b")
+    model = build_model(cfg)
+    p_specs = partition_params(model, cfg, SINGLE)
+    s = state_specs(p_specs)
+    p_leaves = jax.tree.leaves(p_specs, is_leaf=is_partition_spec)
+    for key in ("m", "v"):
+        moment = jax.tree.leaves(s[key], is_leaf=is_partition_spec)
+        assert len(moment) == len(p_leaves)
+        assert all(a == b for a, b in zip(moment, p_leaves))
+    assert s["step"] == P()
+    assert "ef" not in s
+    assert "ef" in state_specs(p_specs, compress=True)
+
+
+def test_state_specs_match_init_state_layout():
+    """Specs and the real optimizer state must have identical tree keys."""
+    from repro.train.optim import AdamWConfig, init_state
+
+    params = {"w": np.zeros((4, 4), np.float32)}
+    state = init_state(params, AdamWConfig(compress=True))
+    specs = state_specs({"w": P(None, None)}, compress=True)
+    assert set(state) == set(specs)
+
+
+# ---------------------------------------------------------------------------
+# logical_axis_dims
+# ---------------------------------------------------------------------------
+
+def test_logical_axis_dims_collects_every_tagged_dim():
+    defs = {"a": ParamDef((8, 16), ("ff", "heads")),
+            "b": ParamDef((24,), ("ff",)),
+            "c": ParamDef((5,), (None,))}
+    dims = logical_axis_dims(defs)
+    assert dims == {"ff": {8, 24}, "heads": {16}}
+
+
+def test_data_axes_excludes_model():
+    assert data_axes(MULTI) == ("pod", "data")
+    assert data_axes(SINGLE) == ("data",)

@@ -181,3 +181,42 @@ def test_grouped_dispatch_hint_uses_select_many():
     assert len(hints) == 5 and len(set(hints)) == 1
     assert tuner.stats["evaluations"] == 1
     assert grouped_dispatch_hint([(64, 32, 32)], None) is None
+
+
+def test_grouped_dispatch_hint_rejects_prefix_coverage():
+    """A shape list covering only a prefix of the experts must raise, not
+    silently leave the tail unhinted."""
+    from repro.kernels import grouped_dispatch_hint
+    tuner = _stub_tuner()
+    with pytest.raises(ValueError, match="every expert needs a shape"):
+        grouped_dispatch_hint([(64, 32, 32)] * 3, tuner, n_experts=8)
+    # also guards the no-tuner path (validation before dispatch)
+    with pytest.raises(ValueError, match="every expert needs a shape"):
+        grouped_dispatch_hint([(64, 32, 32)] * 3, None, n_experts=8)
+    assert grouped_dispatch_hint([(64, 32, 32)] * 3, None,
+                                 n_experts=3) is None
+
+
+def test_grouped_matmul_accepts_array_group_sizes():
+    from repro.kernels import grouped_matmul, grouped_matmul_ref
+    tuner = _stub_tuner()
+    x, w = _arr((3, 32, 16), jnp.float32), _arr((3, 16, 24), jnp.float32)
+    out = grouped_matmul(x, w, tuner=tuner,
+                         group_sizes=np.array([32, 8, 1]),
+                         backend="pallas", interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(grouped_matmul_ref(x, w)),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_resolve_backend_env_override(monkeypatch):
+    from repro.kernels.ops import resolve_backend
+    monkeypatch.setenv("ADSALA_BACKEND", "xla")
+    assert resolve_backend("auto") == "xla"
+    monkeypatch.setenv("ADSALA_BACKEND", "pallas")
+    assert resolve_backend("auto") == "pallas"
+    # explicit argument wins over the environment
+    assert resolve_backend("xla") == "xla"
+    monkeypatch.setenv("ADSALA_BACKEND", "mosaic")
+    with pytest.raises(ValueError, match="ADSALA_BACKEND"):
+        resolve_backend("auto")

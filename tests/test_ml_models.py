@@ -20,7 +20,7 @@ from repro.core.ml import (
     stratified_train_test_split,
 )
 from repro.core.ml.registry import MODEL_REGISTRY, model_from_dict
-from repro.core.ml.tree import PackedEnsemble, tree_predict
+from repro.core.ml.tree import PackedEnsemble, tree_predict, tree_predict_row
 
 
 def _dataset(n=400, seed=0):
@@ -74,6 +74,59 @@ def test_packed_ensemble_matches_per_tree():
                      axis=1)
     np.testing.assert_allclose(packed.predict_all(X[:31]), naive,
                                atol=1e-12)
+
+
+def test_packed_ensemble_matches_scalar_row_walk():
+    """The multi-row lane walk == scalar per-row descent, per tree."""
+    X, y = _dataset(200, seed=5)
+    forest = RandomForestRegressor(n_estimators=10, max_depth=7,
+                                   seed=6).fit(X, y)
+    packed = PackedEnsemble(forest.trees_)
+    got = packed.predict_all(X[:17])
+    want = np.array([[tree_predict_row(t, x) for t in forest.trees_]
+                     for x in X[:17]])
+    np.testing.assert_allclose(got, want, atol=1e-12)
+
+
+def test_packed_ensemble_retires_shallow_trees():
+    """Mixed-depth ensembles (stumps next to deep CARTs) stay exact: the
+    lane walk retires finished (row, tree) pairs, it must not move them."""
+    X, y = _dataset(300, seed=7)
+    trees = (
+        [DecisionTreeRegressor(max_depth=1).fit(X, y).tree_] * 3
+        + [DecisionTreeRegressor(max_depth=12).fit(X, y).tree_]
+    )
+    packed = PackedEnsemble(trees)
+    assert packed.max_depth > 1
+    naive = np.stack([tree_predict(t, X) for t in trees], axis=1)
+    np.testing.assert_allclose(packed.predict_all(X), naive, atol=1e-12)
+
+
+def test_packed_ensemble_single_node_trees():
+    """All-leaf ensembles (0 splits) short-circuit the walk entirely."""
+    X = np.zeros((5, 2))
+    tree = DecisionTreeRegressor(max_depth=0).fit(X, np.full(5, 3.25)).tree_
+    packed = PackedEnsemble([tree, tree])
+    np.testing.assert_allclose(packed.predict_all(X), 3.25)
+
+
+def test_ensemble_predict_matches_per_row_dispatch():
+    """Batch predict == concatenated single-row predicts for every
+    packed-ensemble regressor (the select_many vs scalar-dispatch parity
+    the tuner relies on)."""
+    X, y = _dataset(250, seed=8)
+    for cls, params in [
+        (RandomForestRegressor, {"n_estimators": 8, "max_depth": 6}),
+        (XGBRegressor, {"n_estimators": 20, "max_depth": 4}),
+        (AdaBoostR2Regressor, {"n_estimators": 8, "max_depth": 4}),
+        (HistGradientBoostingRegressor, {"n_estimators": 20}),
+    ]:
+        model = cls(**params).fit(X, y)
+        batched = model.predict(X[:13])
+        scalar = np.concatenate([model.predict(X[i:i + 1])
+                                 for i in range(13)])
+        np.testing.assert_allclose(batched, scalar, atol=1e-12,
+                                   err_msg=cls.__name__)
 
 
 def test_kfold_partitions_everything():
