@@ -1,0 +1,109 @@
+"""Mixed-routine install grid: batched timing-program cost + per-routine
+install speedups (the arXiv 2406.19621 Tables III/IV analogue).
+
+Reports, as ``name,us_per_call,derived`` CSV lines:
+
+  * the batched ``estimate_batch_terms`` pass over a mixed
+    {gemm, syrk, trsm} grid vs the scalar ``estimate_routine_time`` loop
+    (the BLAS-3 generalisation of bench_install_vectorised);
+  * a small mixed-routine ``install()`` on the simulated backend with
+    the selected model's per-routine warm/ideal speedups.
+
+``--smoke`` (used by the CI routines job) shrinks the grid and install
+budget to seconds.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from repro.core import (
+    InstallConfig,
+    ROUTINES,
+    SimulatedBackend,
+    candidate_configs,
+    estimate_batch_terms,
+    estimate_routine_time,
+    gather_data,
+    install,
+)
+from repro.core.halton import sample_gemm_dims
+
+
+def _bench(fn, reps: int = 3) -> float:
+    fn()  # warm
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(smoke: bool = False) -> list[str]:
+    lines = []
+    n_dims, n_cfgs = (60, 32) if smoke else (300, 128)
+
+    dims = sample_gemm_dims(n_dims, mem_limit_bytes=500 * 2**20, seed=0)
+    cfgs = candidate_configs(512)[:n_cfgs]
+    routines = [ROUTINES[i % len(ROUTINES)] for i in range(len(dims))]
+
+    def scalar_grid():
+        for (m, k, n), r in zip(dims, routines):
+            for c in cfgs:
+                estimate_routine_time(int(m), int(k), int(n), c,
+                                      routine=r).total_s
+
+    t_scalar = _bench(scalar_grid, reps=1)
+    t_batch = _bench(
+        lambda: estimate_batch_terms(dims, cfgs,
+                                     routines=routines).total_s)
+    cells = f"{n_dims}x{n_cfgs}_mixed_cells"
+    lines.append(f"routine_grid_scalar,{t_scalar * 1e6:.0f},{cells}")
+    lines.append(f"routine_grid_batched,{t_batch * 1e6:.0f},{cells}")
+    lines.append(f"routine_grid_speedup,"
+                 f"{t_scalar / max(t_batch, 1e-12):.1f},x")
+
+    # parity spot-check so the benchmark can't silently drift from the
+    # reference path it claims to accelerate
+    bb = estimate_batch_terms(dims[:6], cfgs, routines=routines[:6])
+    for i, (m, k, n) in enumerate(dims[:6]):
+        want = estimate_routine_time(int(m), int(k), int(n), cfgs[0],
+                                     routine=routines[i]).total_s
+        assert bb.total_s[i, 0] == want, "batched/scalar drift"
+
+    # --- mixed-routine install with per-routine report --------------------
+    icfg = InstallConfig(
+        n_samples=24 if smoke else 90,
+        repeats=2, tile_ids=(0, 3),
+        models=("linear_regression",) if smoke
+        else ("linear_regression", "decision_tree", "xgboost"),
+        routines=tuple(ROUTINES), grid_budget="small", cv_splits=3,
+        seed=0)
+    backend = SimulatedBackend(seed=0)
+    t0 = time.perf_counter()
+    data = gather_data(backend, icfg)
+    report = install(backend, icfg, data=data)
+    t_install = time.perf_counter() - t0
+    lines.append(f"routine_install,{t_install * 1e6:.0f},"
+                 f"{icfg.n_samples}dims_3routines")
+    sel = next(r for r in report.reports if r.name == report.selected)
+    for routine, s in sel.per_routine.items():
+        lines.append(
+            f"routine_speedup_{routine},{s['warm_est_mean_speedup']:.3f},"
+            f"ideal={s['ideal_mean_speedup']:.3f}"
+            f"_n={int(s['n_test'])}")
+    return lines
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv
+    for line in run(smoke=smoke):
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

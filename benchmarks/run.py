@@ -24,11 +24,13 @@ def main() -> None:
         bench_model_selection,
         bench_predesigned,
         bench_roofline,
+        bench_routine_grid,
         bench_spec_derivation,
         bench_speedup_stats,
     )
     suites = [
         ("install_vectorised", bench_install_vectorised.run),
+        ("routine_grid", bench_routine_grid.run),
         ("spec_derivation", bench_spec_derivation.run),
         ("fig1_fig8_histogram", bench_histogram.run),
         ("fig9_heatmap", bench_heatmap.run),

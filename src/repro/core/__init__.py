@@ -7,6 +7,8 @@ Pipeline:  halton -> timing backend -> features/preprocessing -> ml zoo
 
 from repro.core.costmodel import (
     DEFAULT_TILES,
+    ROUTINES,
+    TRSM_SEQ_CHIPS,
     BatchBreakdown,
     GemmConfig,
     TimeBreakdown,
@@ -15,6 +17,8 @@ from repro.core.costmodel import (
     estimate_batch,
     estimate_batch_terms,
     estimate_gemm_time,
+    estimate_routine_time,
+    routine_ids,
 )
 from repro.core.halton import gemm_bytes, sample_gemm_dims, scrambled_halton
 from repro.core.installer import (
@@ -30,13 +34,16 @@ from repro.core.timing import (
     MeasuredCPUBackend,
     SimulatedBackend,
     time_gemm_grid,
+    time_routine_grid,
 )
 from repro.core.tuner import AdsalaTuner
 
 __all__ = [
     "TPUSpec", "GemmConfig", "TimeBreakdown", "BatchBreakdown",
-    "DEFAULT_TILES", "candidate_configs", "estimate_gemm_time",
+    "DEFAULT_TILES", "ROUTINES", "TRSM_SEQ_CHIPS", "candidate_configs",
+    "estimate_gemm_time", "estimate_routine_time", "routine_ids",
     "estimate_batch", "estimate_batch_terms", "time_gemm_grid",
+    "time_routine_grid",
     "scrambled_halton", "sample_gemm_dims", "gemm_bytes",
     "InstallConfig", "GatheredData", "InstallReport", "gather_data",
     "install", "load_artifact", "DEFAULT_WORKER_CONFIG",

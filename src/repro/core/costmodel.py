@@ -1,13 +1,30 @@
-"""Calibrated TPU v5e analytic performance model for distributed GEMM.
+"""Calibrated TPU v5e analytic performance model for distributed BLAS-3.
 
 This is the install-time "timing program" of the paper (§III-B) for the
-TPU target: the container is CPU-only, so GEMM timings at every candidate
-worker configuration are produced by an analytic model of a v5e pod
-instead of wall-clock measurement (DESIGN.md §Hardware adaptation).  The
-model is intentionally *not* smooth: it contains wave quantisation on the
-MXU grid, VMEM-overflow cliffs, ICI latency floors and lognormal noise,
-so the learning problem retains the character of the paper's measured
-data (skewed features, heteroscedastic noise, non-obvious optimum).
+TPU target: the container is CPU-only, so routine timings at every
+candidate worker configuration are produced by an analytic model of a
+v5e pod instead of wall-clock measurement (DESIGN.md §Hardware
+adaptation).  The model is intentionally *not* smooth: it contains wave
+quantisation on the MXU grid, VMEM-overflow cliffs, ICI latency floors
+and lognormal noise, so the learning problem retains the character of
+the paper's measured data (skewed features, heteroscedastic noise,
+non-obvious optimum).
+
+Beyond plain GEMM the model covers the two BLAS-3 routines of the
+follow-up paper (arXiv 2406.19621), interpreted on the shared (m, k, n)
+triple:
+
+  gemm — C[m,n] = A[m,k] @ B[k,n].  The baseline; unchanged.
+  syrk — rank-k update writing only the lower triangle of C[m,n]
+         (callers use m == n).  Computes the triangular fraction of the
+         output tile grid, so its FLOPs are <= GEMM's for the same
+         (m, k, n); output HBM traffic and the K-partition all-reduce
+         shrink by the same triangular fraction.
+  trsm — blocked substitution X[m,n] against a triangular A (k = update
+         panel depth): half the multiply-adds of GEMM, triangular
+         operand reads, and a *sequential dependency* along M — row
+         panels retire in order, so at most TRSM_SEQ_CHIPS chips help on
+         the M axis and every M-panel costs a dependent kernel launch.
 
 The same formulas (without noise) are reused by the roofline analysis —
 keeping the tuner's world model and the §Roofline arithmetic consistent.
@@ -28,8 +45,49 @@ import numpy as np
 __all__ = [
     "TPUSpec", "GemmConfig", "TimeBreakdown", "BatchBreakdown",
     "candidate_configs", "config_arrays", "estimate_gemm_time",
-    "estimate_batch_terms", "estimate_batch", "DEFAULT_TILES",
+    "estimate_routine_time", "estimate_batch_terms", "estimate_batch",
+    "DEFAULT_TILES", "ROUTINES", "TRSM_SEQ_CHIPS", "routine_ids",
 ]
+
+#: BLAS-3 routines the stack understands; index = routine id feature.
+ROUTINES: tuple[str, ...] = ("gemm", "syrk", "trsm")
+
+#: Max chips that help along TRSM's sequential (M) dimension — the
+#: substitution pipeline depth.  Chips beyond this idle on that axis.
+TRSM_SEQ_CHIPS = 4
+
+
+def routine_ids(routines, n: int) -> np.ndarray:
+    """Normalise a routine argument to an (n,) int array of ROUTINES ids.
+
+    Accepts ``None`` (all gemm), a single routine name or id, or a
+    sequence of names/ids with one entry per dim.
+    """
+    if routines is None:
+        return np.zeros(n, dtype=np.int64)
+    if isinstance(routines, str):
+        return np.full(n, _routine_id(routines), dtype=np.int64)
+    if isinstance(routines, (int, np.integer)):
+        return np.full(n, _routine_id(routines), dtype=np.int64)
+    ids = np.asarray([_routine_id(r) for r in routines], dtype=np.int64)
+    if len(ids) != n:
+        raise ValueError(
+            f"got {len(ids)} routines for {n} dims; pass one per dim "
+            "(or a single routine for the whole batch)")
+    return ids
+
+
+def _routine_id(routine) -> int:
+    if isinstance(routine, (int, np.integer)):
+        if not 0 <= int(routine) < len(ROUTINES):
+            raise ValueError(f"unknown routine id {routine!r}; "
+                             f"expected 0..{len(ROUTINES) - 1}")
+        return int(routine)
+    try:
+        return ROUTINES.index(routine)
+    except ValueError:
+        raise ValueError(f"unknown routine {routine!r}; "
+                         f"expected one of {ROUTINES}") from None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -128,12 +186,18 @@ def _ceil_div(a: int, b: int) -> int:
     return -(-a // b)
 
 
-def _local_shape(m: int, k: int, n: int, cfg: GemmConfig
-                 ) -> tuple[int, int, int]:
-    """Per-chip GEMM extents under the chosen partitioning."""
+def _local_shape(m: int, k: int, n: int, cfg: GemmConfig,
+                 routine: str = "gemm") -> tuple[int, int, int]:
+    """Per-chip problem extents under the chosen partitioning.
+
+    TRSM's substitution dependency runs along M: sharding M (directly or
+    via 2D) only helps up to ``TRSM_SEQ_CHIPS`` chips — the rest wait on
+    their predecessors' panels.
+    """
     p = cfg.n_chips
     if cfg.partition == "M":
-        return _ceil_div(m, p), k, n
+        pm = min(p, TRSM_SEQ_CHIPS) if routine == "trsm" else p
+        return _ceil_div(m, pm), k, n
     if cfg.partition == "N":
         return m, k, _ceil_div(n, p)
     if cfg.partition == "K":
@@ -141,12 +205,20 @@ def _local_shape(m: int, k: int, n: int, cfg: GemmConfig
     # 2D: factor p into the two most square factors, shard M x N
     pm = 2 ** (int(math.log2(p)) // 2)
     pn = p // pm
+    if routine == "trsm":
+        pm = min(pm, TRSM_SEQ_CHIPS)
     return _ceil_div(m, pm), k, _ceil_div(n, pn)
 
 
 def _collective_bytes(m: int, k: int, n: int, cfg: GemmConfig,
-                      dtype_bytes: int) -> tuple[float, int]:
-    """(bytes per chip moved over ICI, number of collective phases)."""
+                      dtype_bytes: int, routine: str = "gemm"
+                      ) -> tuple[float, int]:
+    """(bytes per chip moved over ICI, number of collective phases).
+
+    Routine-aware: SYRK's K-partition all-reduce carries only the
+    triangular half of C; TRSM's 2D rings use the dependency-capped M
+    factor (idle chips gather nothing extra).
+    """
     p = cfg.n_chips
     if p == 1:
         return 0.0, 0
@@ -156,10 +228,15 @@ def _collective_bytes(m: int, k: int, n: int, cfg: GemmConfig,
     if cfg.partition == "N":      # all-gather A
         return frac * m * k * dtype_bytes, 1
     if cfg.partition == "K":      # all-reduce partial C (2x traffic)
-        return 2.0 * frac * m * n * dtype_bytes, 2
+        coll = 2.0 * frac * m * n * dtype_bytes
+        if routine == "syrk":     # only the triangle is reduced
+            coll = coll * 0.5
+        return coll, 2
     # 2D: all-gather A along pn ring, B along pm ring
     pm = 2 ** (int(math.log2(p)) // 2)
     pn = p // pm
+    if routine == "trsm":
+        pm = min(pm, TRSM_SEQ_CHIPS)
     bytes_a = (pn - 1) / pn * (m // max(pm, 1)) * k * dtype_bytes
     bytes_b = (pm - 1) / pm * k * (n // max(pn, 1)) * dtype_bytes
     return bytes_a + bytes_b, 2
@@ -172,19 +249,48 @@ def estimate_gemm_time(m: int, k: int, n: int, cfg: GemmConfig,
                        ) -> TimeBreakdown:
     """Analytic runtime of C[m,n] = A[m,k] @ B[k,n] under ``cfg``.
 
+    The GEMM specialisation of :func:`estimate_routine_time` (identical
+    arithmetic — the routine branches are no-ops for gemm).
+    """
+    return estimate_routine_time(m, k, n, cfg, spec, routine="gemm",
+                                 dtype_bytes=dtype_bytes, rng=rng)
+
+
+def estimate_routine_time(m: int, k: int, n: int, cfg: GemmConfig,
+                          spec: TPUSpec = TPUSpec(), *,
+                          routine: str = "gemm",
+                          dtype_bytes: int = 2,
+                          rng: np.random.Generator | None = None
+                          ) -> TimeBreakdown:
+    """Analytic runtime of one BLAS-3 routine call under ``cfg``.
+
     Terms:
       compute    — wave-quantised MXU time for the per-chip tile grid
-      memory     — HBM traffic incl. tile re-reads (blocked GEMM reads A
-                   once per N-block column and B once per M-block row)
-      collective — ICI ring time + per-hop latency floor
-      launch     — per-kernel-invocation overhead
+                   (SYRK: triangular fraction of the output grid; TRSM:
+                   half the multiply-adds)
+      memory     — HBM traffic incl. tile re-reads (SYRK writes/re-reads
+                   only triangular C tiles; TRSM reads a triangular A)
+      collective — ICI ring time + per-hop latency floor (routine-aware,
+                   see :func:`_collective_bytes`)
+      launch     — per-kernel-invocation overhead; TRSM multiplies by the
+                   M-panel dependency chain (panels retire sequentially)
     Noise (rng given): multiplicative lognormal + rare straggler spikes.
+
+    This scalar path is the bit-for-bit reference for the vectorised
+    :func:`estimate_batch_terms`.
     """
-    lm, lk, ln = _local_shape(m, k, n, cfg)
+    routine = ROUTINES[_routine_id(routine)]
+    lm, lk, ln = _local_shape(m, k, n, cfg, routine)
     bm, bk, bn = cfg.tile
     bm, bk, bn = min(bm, _pad(lm)), min(bk, _pad(lk)), min(bn, _pad(ln))
 
     gm, gk, gn = _ceil_div(lm, bm), _ceil_div(lk, bk), _ceil_div(ln, bn)
+
+    # triangular fraction of the local output tile grid: the share of
+    # (gm x gn) tiles a lower-triangular output actually touches.  Exact
+    # for square grids (g(g+1)/2 tiles); <= 1 always, -> 1/2 as the grid
+    # grows, == 1 for a single tile.
+    tri_frac = 0.5 * (1.0 + 1.0 / max(gm, gn))
 
     # ---- compute: padded-tile FLOPs at MXU efficiency --------------------
     mxu = spec.mxu_dim
@@ -194,25 +300,37 @@ def estimate_gemm_time(m: int, k: int, n: int, cfg: GemmConfig,
     eff_k = min(1.0, (bk + 16) / mxu) if bk < mxu else 1.0
     mxu_eff = max(eff_m * eff_n * min(eff_k, 1.0), 0.02)
     flops = 2.0 * (gm * bm) * (gk * bk) * (gn * bn)
+    if routine == "syrk":
+        flops = flops * tri_frac
+    elif routine == "trsm":       # substitution: half the multiply-adds
+        flops = flops * 0.5
     compute_s = flops / (spec.peak_flops * mxu_eff)
 
-    # ---- memory: blocked-GEMM HBM traffic --------------------------------
+    # ---- memory: blocked HBM traffic -------------------------------------
     bytes_a = lm * lk * gn * dtype_bytes          # A re-read per N block col
     bytes_b = lk * ln * gm * dtype_bytes          # B re-read per M block row
     bytes_c = lm * ln * (dtype_bytes + 2 * dtype_bytes * (gk - 1))
+    if routine == "syrk":         # only triangular C tiles written/re-read
+        bytes_c = bytes_c * tri_frac
+    elif routine == "trsm":       # triangular operand panel reads
+        bytes_a = bytes_a * 0.5
     # VMEM overflow cliff: working set beyond VMEM spills accumulators
     working = (bm * bk + bk * bn + bm * bn) * dtype_bytes * 2  # dbl buffer
     spill = 1.0 if working <= spec.vmem_bytes else 4.0
     memory_s = spill * (bytes_a + bytes_b + bytes_c) / spec.hbm_bw
 
     # ---- collective: ring bandwidth + latency floor -----------------------
-    coll_bytes, phases = _collective_bytes(m, k, n, cfg, dtype_bytes)
+    coll_bytes, phases = _collective_bytes(m, k, n, cfg, dtype_bytes,
+                                           routine)
     hops = max(cfg.n_chips - 1, 0)
     collective_s = (coll_bytes / spec.ici_bw_total
                     + phases * (hops * spec.collective_latency_s
                                 + spec.collective_dispatch_s))
 
     launch_s = spec.launch_overhead_s * max(1.0, math.log2(cfg.n_chips + 1))
+    if routine == "trsm":
+        # dependency chain: every global M panel is a dependent launch
+        launch_s = launch_s * _ceil_div(m, bm)
 
     tb = TimeBreakdown(compute_s, memory_s, collective_s, launch_s)
     if rng is not None:
@@ -278,29 +396,39 @@ def _pad_f(x: np.ndarray) -> np.ndarray:
 def estimate_batch_terms(dims: np.ndarray, cfgs: list[GemmConfig],
                          spec: TPUSpec = TPUSpec(), *,
                          dtype_bytes: int = 2,
-                         rng: np.random.Generator | None = None
-                         ) -> BatchBreakdown:
-    """Vectorised :func:`estimate_gemm_time` over a (dims x configs) grid.
+                         rng: np.random.Generator | None = None,
+                         routines=None) -> BatchBreakdown:
+    """Vectorised :func:`estimate_routine_time` over a (dims x configs)
+    grid.
 
     One broadcasted NumPy pass instead of ``D * C`` scalar calls — the
-    install-time "timing program" hot path.  Noise-free output matches the
-    scalar path bit-for-bit (every term applies the identical sequence of
-    IEEE operations elementwise; all intermediate quantities are
-    integer-valued and < 2**53, so the float64 arithmetic is exact).
-    With ``rng`` the noise model is the same lognormal jitter + rare
-    straggler spikes, drawn as (D, C) blocks (the draw order differs from
-    the scalar loop, so noisy values match in distribution, not bitwise).
+    install-time "timing program" hot path.  ``routines`` is ``None``
+    (all gemm), a single routine name, or one name/id per dim — rows of
+    the grid may mix routines freely.  Noise-free output matches the
+    scalar path bit-for-bit for every routine (each term applies the
+    identical sequence of IEEE operations elementwise; routine
+    multipliers are either exact power-of-two scalings or the same
+    float64 products in the same order).  With ``rng`` the noise model is
+    the same lognormal jitter + rare straggler spikes, drawn as (D, C)
+    blocks (the draw order differs from the scalar loop, so noisy values
+    match in distribution, not bitwise).
     """
     dims = np.atleast_2d(np.asarray(dims, dtype=np.int64))
     m = dims[:, 0:1].astype(np.float64)   # (D, 1) — broadcast against (C,)
     k = dims[:, 1:2].astype(np.float64)
     n = dims[:, 2:3].astype(np.float64)
+    rids = routine_ids(routines, len(dims))
+    is_syrk_d = (rids == ROUTINES.index("syrk"))[:, None]     # (D, 1)
+    is_trsm_d = (rids == ROUTINES.index("trsm"))[:, None]
+    any_syrk = bool(is_syrk_d.any())
+    any_trsm = bool(is_trsm_d.any())
     ca = config_arrays(cfgs)
 
     # Local shapes, collectives and launch cost are tile-independent, so
     # compute them once per unique (n_chips, partition) pair — typically
     # ~8x fewer columns than the full candidate set — and gather back to
-    # (D, C) by index afterwards.
+    # (D, C) by index afterwards.  (Routine only varies along D, so the
+    # dedup over config columns survives the routine axis.)
     pp_keys = ca["partition"] * (int(ca["n_chips"].max()) + 1) \
         + ca["n_chips"]
     _, uniq_idx, inv = np.unique(pp_keys, return_index=True,
@@ -317,8 +445,16 @@ def estimate_batch_terms(dims: np.ndarray, cfgs: list[GemmConfig],
     is_k = part == _PARTITIONS.index("K")
     is_2d = part == _PARTITIONS.index("2D")
 
-    lm = np.where(is_m, _ceil_div_f(m, p),
-                  np.where(is_2d, _ceil_div_f(m, pm2d), m))   # (D, U)
+    # TRSM: at most TRSM_SEQ_CHIPS chips help along the sequential M axis
+    if any_trsm:
+        p_m = np.where(is_trsm_d, np.minimum(p, float(TRSM_SEQ_CHIPS)), p)
+        pm2d_eff = np.where(is_trsm_d,
+                            np.minimum(pm2d, float(TRSM_SEQ_CHIPS)), pm2d)
+    else:
+        p_m, pm2d_eff = p, pm2d
+
+    lm = np.where(is_m, _ceil_div_f(m, p_m),
+                  np.where(is_2d, _ceil_div_f(m, pm2d_eff), m))  # (D, U)
     lk = np.where(is_k, _ceil_div_f(k, p), k)
     ln = np.where(is_n, _ceil_div_f(n, p),
                   np.where(is_2d, _ceil_div_f(n, pn2d), n))
@@ -333,6 +469,9 @@ def estimate_batch_terms(dims: np.ndarray, cfgs: list[GemmConfig],
     gk = _ceil_div_f(lk, bk)
     gn = _ceil_div_f(ln, bn)
 
+    # triangular fraction of the local output tile grid (see scalar path)
+    tri_frac = 0.5 * (1.0 + 1.0 / np.maximum(gm, gn))
+
     # ---- compute: padded-tile FLOPs at wave-quantised MXU efficiency -----
     mxu = float(spec.mxu_dim)
     eff_m = bm / (_ceil_div_f(bm, mxu) * mxu)
@@ -340,25 +479,36 @@ def estimate_batch_terms(dims: np.ndarray, cfgs: list[GemmConfig],
     eff_k = np.where(bk < mxu, np.minimum(1.0, (bk + 16) / mxu), 1.0)
     mxu_eff = np.maximum(eff_m * eff_n * np.minimum(eff_k, 1.0), 0.02)
     flops = 2.0 * (gm * bm) * (gk * bk) * (gn * bn)
+    if any_syrk:
+        flops = np.where(is_syrk_d, flops * tri_frac, flops)
+    if any_trsm:
+        flops = np.where(is_trsm_d, flops * 0.5, flops)
     compute_s = flops / (spec.peak_flops * mxu_eff)
 
-    # ---- memory: blocked-GEMM HBM traffic with VMEM-spill cliff ----------
+    # ---- memory: blocked HBM traffic with VMEM-spill cliff ---------------
     bytes_a = lm * lk * gn * dtype_bytes
     bytes_b = lk * ln * gm * dtype_bytes
     bytes_c = lm * ln * (dtype_bytes + 2 * dtype_bytes * (gk - 1))
+    if any_syrk:
+        bytes_c = np.where(is_syrk_d, bytes_c * tri_frac, bytes_c)
+    if any_trsm:
+        bytes_a = np.where(is_trsm_d, bytes_a * 0.5, bytes_a)
     working = (bm * bk + bk * bn + bm * bn) * dtype_bytes * 2
     spill = np.where(working <= spec.vmem_bytes, 1.0, 4.0)
     memory_s = spill * (bytes_a + bytes_b + bytes_c) / spec.hbm_bw
 
     # ---- collective: ring bandwidth + latency floor (per (p, part)) ------
     frac = (p - 1) / p
+    coll_k = 2.0 * frac * m * n * dtype_bytes
+    if any_syrk:                  # SYRK all-reduces only the triangle
+        coll_k = np.where(is_syrk_d, coll_k * 0.5, coll_k)
     coll_bytes = np.where(
         is_m, frac * k * n * dtype_bytes,
         np.where(is_n, frac * m * k * dtype_bytes,
-                 np.where(is_k, 2.0 * frac * m * n * dtype_bytes,
+                 np.where(is_k, coll_k,
                           (pn2d - 1) / pn2d
-                          * (m // np.maximum(pm2d, 1)) * k * dtype_bytes
-                          + (pm2d - 1) / pm2d
+                          * (m // np.maximum(pm2d_eff, 1)) * k * dtype_bytes
+                          + (pm2d_eff - 1) / pm2d_eff
                           * k * (n // np.maximum(pn2d, 1)) * dtype_bytes)))
     phases = np.where(is_m | is_n, 1, 2)
     coll_bytes = np.where(p == 1, 0.0, coll_bytes)
@@ -371,6 +521,9 @@ def estimate_batch_terms(dims: np.ndarray, cfgs: list[GemmConfig],
     launch_s = spec.launch_overhead_s * np.maximum(1.0, np.log2(p + 1))
     launch_s = np.broadcast_to(launch_s[:, inv],
                                compute_s.shape).copy()
+    if any_trsm:                  # dependent launch per global M panel
+        launch_s = np.where(is_trsm_d, launch_s * _ceil_div_f(m, bm),
+                            launch_s)
 
     if rng is not None:
         jitter = np.exp(rng.normal(0.0, 0.05, size=compute_s.shape))
@@ -385,13 +538,15 @@ def estimate_batch_terms(dims: np.ndarray, cfgs: list[GemmConfig],
 
 def estimate_batch(dims: np.ndarray, cfgs: list[GemmConfig],
                    spec: TPUSpec = TPUSpec(), *, dtype_bytes: int = 2,
-                   seed: int | None = 0) -> np.ndarray:
+                   seed: int | None = 0, routines=None) -> np.ndarray:
     """Runtime matrix, shape (len(dims), len(cfgs)); noisy if seed given.
 
     Vectorised: one broadcasted pass over the whole grid (see
     :func:`estimate_batch_terms`) instead of the historical D*C scalar
     loop — ~2 orders of magnitude faster at install-scale grids.
+    ``routines`` (None, one name, or one per dim) selects the BLAS-3
+    routine each row of the grid is timed as.
     """
     rng = np.random.default_rng(seed) if seed is not None else None
     return estimate_batch_terms(dims, cfgs, spec, dtype_bytes=dtype_bytes,
-                                rng=rng).total_s
+                                rng=rng, routines=routines).total_s

@@ -1,4 +1,4 @@
-"""Feature engineering for GEMM runtime regression (paper Table II).
+"""Feature engineering for BLAS-3 runtime regression (paper Table II).
 
 Group 1 (serial terms):   m, k, n, n_workers, m*k, m*n, k*n, m*k*n,
                           m*k + k*n + m*n
@@ -10,15 +10,28 @@ the feature map receives the *chip count* as ``n_workers`` plus a tile
 index — see DESIGN.md §Hardware adaptation.  The tile index enters as an
 extra categorical-as-numeric column so the identical Table II structure
 is preserved.
+
+Routine extension (arXiv 2406.19621 analogue): when a ``routine_id`` is
+given, six routine-aware columns are appended — a one-hot over
+{syrk, trsm} (gemm is the all-zero baseline), the asymptotic flop scale
+(gemm 1, syrk/trsm ½), the scaled work volume ``flops_scale * mkn`` and
+its per-worker share, and a routine-specific aspect ratio (trsm: m/n,
+the dependency-chain length per RHS column; syrk: k/m, update depth per
+output row; gemm: 0).  ``routine_id=None`` emits the original 19-column
+GEMM-only layout so models trained by pre-routine installations keep
+receiving exactly the features they were fitted on.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["FEATURE_NAMES", "build_features", "build_features_single"]
+from repro.core.costmodel import ROUTINES
 
-FEATURE_NAMES: list[str] = [
+__all__ = ["FEATURE_NAMES", "LEGACY_FEATURE_NAMES", "ROUTINE_FLOP_SCALE",
+           "build_features", "build_features_single"]
+
+LEGACY_FEATURE_NAMES: list[str] = [
     # Group 1 — serial terms
     "m", "k", "n", "n_workers",
     "m*k", "m*n", "k*n", "m*k*n", "m*k+k*n+m*n",
@@ -31,12 +44,37 @@ FEATURE_NAMES: list[str] = [
     "partition_id",
 ]
 
+FEATURE_NAMES: list[str] = LEGACY_FEATURE_NAMES + [
+    # BLAS-3 routine extension (gemm = all-zero one-hot baseline)
+    "routine_syrk",
+    "routine_trsm",
+    "flops_scale",          # asymptotic flop ratio vs gemm: 1 / 0.5 / 0.5
+    "mkn_scaled",           # flops_scale * m*k*n (routine-adjusted volume)
+    "mkn_scaled/t",
+    "seq_ratio",            # trsm: m/n; syrk: k/m; gemm: 0
+]
+
+#: asymptotic flop count relative to a GEMM of the same (m, k, n)
+ROUTINE_FLOP_SCALE: tuple[float, ...] = (1.0, 0.5, 0.5)
+
+assert len(ROUTINE_FLOP_SCALE) == len(ROUTINES)
+
+_SYRK = ROUTINES.index("syrk")
+_TRSM = ROUTINES.index("trsm")
+
 
 def build_features(m: np.ndarray, k: np.ndarray, n: np.ndarray,
                    n_workers: np.ndarray,
                    tile_id: np.ndarray | int = 0,
-                   partition_id: np.ndarray | int = 0) -> np.ndarray:
-    """Vectorised Table II feature matrix, shape (N, len(FEATURE_NAMES))."""
+                   partition_id: np.ndarray | int = 0,
+                   routine_id: np.ndarray | int | None = None
+                   ) -> np.ndarray:
+    """Vectorised Table II feature matrix.
+
+    Shape (N, len(FEATURE_NAMES)) when ``routine_id`` is given (scalar or
+    per-row array of ROUTINES indices), or the legacy
+    (N, len(LEGACY_FEATURE_NAMES)) layout when it is ``None``.
+    """
     m = np.asarray(m, dtype=np.float64)
     k = np.asarray(k, dtype=np.float64)
     n = np.asarray(n, dtype=np.float64)
@@ -59,13 +97,26 @@ def build_features(m: np.ndarray, k: np.ndarray, n: np.ndarray,
         tile,
         part,
     ]
+    if routine_id is not None:
+        rid = np.broadcast_to(
+            np.asarray(routine_id, dtype=np.int64), m.shape)
+        is_syrk = (rid == _SYRK).astype(np.float64)
+        is_trsm = (rid == _TRSM).astype(np.float64)
+        scale = np.asarray(ROUTINE_FLOP_SCALE, dtype=np.float64)[rid]
+        mkn_scaled = scale * mkn
+        seq_ratio = is_trsm * (m / n) + is_syrk * (k / m)
+        cols += [is_syrk, is_trsm, scale, mkn_scaled, mkn_scaled / t,
+                 seq_ratio]
     return np.stack(cols, axis=1)
 
 
 def build_features_single(m: int, k: int, n: int, n_workers: int,
                           tile_id: int = 0,
-                          partition_id: int = 0) -> np.ndarray:
-    """(1, F) feature row for a single GEMM instance."""
+                          partition_id: int = 0,
+                          routine_id: int | None = None) -> np.ndarray:
+    """(1, F) feature row for a single routine instance."""
     return build_features(np.array([m]), np.array([k]), np.array([n]),
                           np.array([n_workers]), np.array([tile_id]),
-                          np.array([partition_id]))
+                          np.array([partition_id]),
+                          None if routine_id is None
+                          else np.array([routine_id]))

@@ -23,14 +23,18 @@ from typing import Any
 import numpy as np
 
 from repro.core import costmodel
-from repro.core.costmodel import GemmConfig
+from repro.core.costmodel import ROUTINES, GemmConfig, routine_ids
 from repro.core.features import FEATURE_NAMES, build_features
 from repro.core.halton import sample_gemm_dims
 from repro.core.ml import grid_search, make_model, rmse
 from repro.core.ml.base import normalised_rmse, stratified_train_test_split
 from repro.core.ml.registry import default_param_grids, model_from_dict
 from repro.core.preprocessing import PreprocessPipeline
-from repro.core.timing import SimulatedBackend, TimingBackend, time_gemm_grid
+from repro.core.timing import (
+    SimulatedBackend,
+    TimingBackend,
+    time_routine_grid,
+)
 
 __all__ = [
     "GatheredData", "InstallConfig", "ModelReport", "InstallReport",
@@ -52,6 +56,10 @@ class InstallConfig:
     dtype_bytes: int = 2
     repeats: int = 3                      # paper: 10 iterations per input
     max_chips: int = 512
+    #: BLAS-3 routines the install grid covers (arXiv 2406.19621:
+    #: routine-aware install).  Sampled dims cycle through these, so a
+    #: 3-routine install splits the budget ~evenly per routine.
+    routines: tuple[str, ...] = ("gemm",)
     tile_ids: tuple[int, ...] = (0, 1, 3, 5)
     train_cfgs_per_dim: int = 12          # row subsample for training
     models: tuple[str, ...] = (
@@ -91,6 +99,17 @@ class GatheredData:
     dims: np.ndarray                       # (D, 3) int64
     cfgs: list[GemmConfig]                 # C candidates
     times: np.ndarray                      # (D, C) median seconds
+    #: per-dim ROUTINES id; None means an all-gemm (pre-routine) grid
+    routines: np.ndarray | None = None     # (D,) int64
+
+    def routine_ids(self) -> np.ndarray:
+        """(D,) ROUTINES ids, zeros for pre-routine grids."""
+        if self.routines is None:
+            return np.zeros(len(self.dims), dtype=np.int64)
+        return np.asarray(self.routines, dtype=np.int64)
+
+    def routine_names(self) -> list[str]:
+        return [ROUTINES[int(r)] for r in self.routine_ids()]
 
     def optimal_worker_index(self) -> np.ndarray:
         return np.argmin(self.times, axis=1)
@@ -101,6 +120,7 @@ class GatheredData:
         configs per dim (the paper separates runs per thread count)."""
         rng = np.random.default_rng(seed)
         D, C = self.times.shape
+        rids = self.routine_ids()
         rows_X, rows_y = [], []
         for i in range(D):
             js = (np.arange(C) if per_dim is None or per_dim >= C
@@ -109,17 +129,19 @@ class GatheredData:
             for j in js:
                 cfg = self.cfgs[j]
                 rows_X.append((m, k, n, cfg.n_chips, cfg.tile_id,
-                               _PARTITIONS.index(cfg.partition)))
+                               _PARTITIONS.index(cfg.partition), rids[i]))
                 rows_y.append(self.times[i, j])
         raw = np.asarray(rows_X, dtype=np.float64)
         X = build_features(raw[:, 0], raw[:, 1], raw[:, 2], raw[:, 3],
-                           raw[:, 4], raw[:, 5])
+                           raw[:, 4], raw[:, 5],
+                           raw[:, 6].astype(np.int64))
         y = np.log(np.maximum(np.asarray(rows_y), 1e-12))
         return X, y
 
     def save(self, path: str) -> None:
         np.savez_compressed(
             path, dims=self.dims, times=self.times,
+            routines=self.routine_ids(),
             cfg_chips=np.asarray([c.n_chips for c in self.cfgs]),
             cfg_tile=np.asarray([c.tile_id for c in self.cfgs]),
             cfg_part=np.asarray(
@@ -131,19 +153,31 @@ class GatheredData:
         cfgs = [GemmConfig(int(c), _PARTITIONS[int(p)], int(t))
                 for c, t, p in zip(z["cfg_chips"], z["cfg_tile"],
                                    z["cfg_part"])]
-        return cls(dims=z["dims"], cfgs=cfgs, times=z["times"])
+        routines = (z["routines"].astype(np.int64)
+                    if "routines" in z.files else None)
+        return cls(dims=z["dims"], cfgs=cfgs, times=z["times"],
+                   routines=routines)
 
 
 def gather_data(backend: TimingBackend, cfg: InstallConfig) -> GatheredData:
     """Paper Fig 2 'data gathering': Halton-sample the domain, run each
-    (input x worker-config) ``repeats`` times, keep the median."""
+    (input x worker-config) ``repeats`` times, keep the median.
+
+    The sampled dims cycle through ``cfg.routines`` so a mixed-routine
+    install covers every routine with ~n_samples/len(routines) inputs;
+    the whole grid is still timed in batched passes (one per repeat).
+    """
     dims = sample_gemm_dims(
         cfg.n_samples, mem_limit_bytes=cfg.mem_limit_bytes,
         dtype_bytes=cfg.dtype_bytes, seed=cfg.seed,
         dim_min=cfg.dim_min, dim_max=cfg.dim_max, log_space=cfg.log_space)
     cfgs = costmodel.candidate_configs(cfg.max_chips, tiles=cfg.tile_ids)
-    times = time_gemm_grid(backend, dims, cfgs, cfg.repeats)
-    return GatheredData(dims=dims, cfgs=cfgs, times=times)
+    per_dim = [cfg.routines[i % len(cfg.routines)]
+               for i in range(len(dims))]
+    rids = routine_ids(per_dim, len(dims))
+    times = time_routine_grid(backend, dims, cfgs, cfg.repeats,
+                              routines=rids)
+    return GatheredData(dims=dims, cfgs=cfgs, times=times, routines=rids)
 
 
 @dataclasses.dataclass
@@ -161,6 +195,10 @@ class ModelReport:
     est_aggregate_speedup: float
     warm_est_mean_speedup: float     # steady state with memo cache
     warm_est_aggregate_speedup: float
+    #: routine name -> held-out speedup stats for that routine's dims
+    #: (the per-routine Tables III/IV analogue of arXiv 2406.19621)
+    per_routine: dict[str, dict[str, float]] = \
+        dataclasses.field(default_factory=dict)
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -186,6 +224,27 @@ class InstallReport:
                 f"{r.warm_est_mean_speedup:9.3f} "
                 f"{r.warm_est_aggregate_speedup:8.3f}")
         lines.append(f"selected: {self.selected}")
+        rt = self.routine_table()
+        if rt:
+            lines.append(rt)
+        return "\n".join(lines)
+
+    def routine_table(self) -> str:
+        """Per-routine speedup rows for the selected model (empty string
+        for single-routine installs)."""
+        sel = next((r for r in self.reports if r.name == self.selected),
+                   None)
+        if sel is None or len(sel.per_routine) <= 1:
+            return ""
+        lines = [f"{'routine':8s} {'n_test':>6s} {'ideal_mean':>10s} "
+                 f"{'ideal_agg':>9s} {'warm_mean':>9s} {'warm_agg':>8s}"]
+        for routine, s in sel.per_routine.items():
+            lines.append(
+                f"{routine:8s} {int(s['n_test']):6d} "
+                f"{s['ideal_mean_speedup']:10.3f} "
+                f"{s['ideal_aggregate_speedup']:9.3f} "
+                f"{s['warm_est_mean_speedup']:9.3f} "
+                f"{s['warm_est_aggregate_speedup']:8.3f}")
         return "\n".join(lines)
 
 
@@ -201,7 +260,8 @@ def _measure_eval_time(model: Any, pipe: PreprocessPipeline,
         np.full(n_candidates, 512.0), np.full(n_candidates, 512.0),
         np.full(n_candidates, 512.0),
         np.maximum(1, np.arange(n_candidates) % 9),
-        np.arange(n_candidates) % 8, np.arange(n_candidates) % 4)
+        np.arange(n_candidates) % 8, np.arange(n_candidates) % 4,
+        np.arange(n_candidates) % len(ROUTINES))
     # warmup
     model.predict(pipe.transform(Xq))
     t0 = time.perf_counter()
@@ -211,7 +271,8 @@ def _measure_eval_time(model: Any, pipe: PreprocessPipeline,
 
 
 def _predict_best_configs(model: Any, pipe: PreprocessPipeline,
-                          dims: np.ndarray, cfgs: list[GemmConfig]
+                          dims: np.ndarray, cfgs: list[GemmConfig],
+                          routines: np.ndarray | None = None
                           ) -> np.ndarray:
     """Predicted-argmin candidate index for every dim, shape (D,).
 
@@ -223,36 +284,59 @@ def _predict_best_configs(model: Any, pipe: PreprocessPipeline,
 
     tuner = AdsalaTuner(model, pipe, cfgs)
     times = tuner.predicted_times_many(
-        [(int(m), int(k), int(n)) for m, k, n in np.asarray(dims)])
+        [(int(m), int(k), int(n)) for m, k, n in np.asarray(dims)],
+        routines=None if routines is None else list(routines))
     return np.argmin(times, axis=1)
 
 
 def _speedups(model: Any, pipe: PreprocessPipeline, data: GatheredData,
               test_dims_idx: np.ndarray, cfg: InstallConfig,
               eval_time_s: float
-              ) -> tuple[float, float, float, float, float, float]:
+              ) -> tuple[tuple[float, float, float, float, float, float],
+                         dict[str, dict[str, float]]]:
     """Ideal / cold-estimated / warm-estimated mean + aggregate speedups
-    over held-out GEMM dims (paper §IV-D)."""
+    over held-out dims (paper §IV-D), plus the same stats split per
+    routine (the arXiv 2406.19621 per-routine tables)."""
     cfgs = data.cfgs
     chips = np.asarray([c.n_chips for c in cfgs], dtype=np.float64)
     try:
         j_default = cfgs.index(cfg.default_config)
     except ValueError:
         j_default = int(np.argmax(chips))
+    rids = data.routine_ids()[test_dims_idx]
     t_orig = data.times[test_dims_idx, j_default]
     best_j = _predict_best_configs(model, pipe, data.dims[test_dims_idx],
-                                   cfgs)
+                                   cfgs, routines=rids)
     t_chosen = data.times[test_dims_idx, best_j]
-    ideal = t_orig / np.maximum(t_chosen, 1e-12)
-    est = t_orig / np.maximum(t_chosen + eval_time_s, 1e-12)
     warm_eval = (1.0 - cfg.cache_hit_rate) * eval_time_s
-    warm = t_orig / np.maximum(t_chosen + warm_eval, 1e-12)
-    return (float(ideal.mean()),
-            float(t_orig.sum() / max(t_chosen.sum(), 1e-12)),
-            float(est.mean()),
-            float(t_orig.sum() / max((t_chosen + eval_time_s).sum(), 1e-12)),
-            float(warm.mean()),
-            float(t_orig.sum() / max((t_chosen + warm_eval).sum(), 1e-12)))
+
+    def _stats(orig: np.ndarray, chosen: np.ndarray
+               ) -> tuple[float, float, float, float, float, float]:
+        ideal = orig / np.maximum(chosen, 1e-12)
+        est = orig / np.maximum(chosen + eval_time_s, 1e-12)
+        warm = orig / np.maximum(chosen + warm_eval, 1e-12)
+        return (float(ideal.mean()),
+                float(orig.sum() / max(chosen.sum(), 1e-12)),
+                float(est.mean()),
+                float(orig.sum() / max((chosen + eval_time_s).sum(),
+                                       1e-12)),
+                float(warm.mean()),
+                float(orig.sum() / max((chosen + warm_eval).sum(),
+                                       1e-12)))
+
+    per_routine: dict[str, dict[str, float]] = {}
+    for rid in sorted(set(int(r) for r in rids)):
+        sel = rids == rid
+        (i_mean, i_agg, _, _, w_mean, w_agg) = _stats(t_orig[sel],
+                                                      t_chosen[sel])
+        per_routine[ROUTINES[rid]] = {
+            "n_test": float(sel.sum()),
+            "ideal_mean_speedup": i_mean,
+            "ideal_aggregate_speedup": i_agg,
+            "warm_est_mean_speedup": w_mean,
+            "warm_est_aggregate_speedup": w_agg,
+        }
+    return _stats(t_orig, t_chosen), per_routine
 
 
 def install(backend: TimingBackend | None = None,
@@ -276,14 +360,17 @@ def install(backend: TimingBackend | None = None,
     test_dims = set(test_dim_idx[:, 0].astype(int).tolist())
     train_mask = np.asarray([i not in test_dims for i in range(D)])
 
+    rids = data.routine_ids()
     train_data = GatheredData(dims=data.dims[train_mask], cfgs=data.cfgs,
-                              times=data.times[train_mask])
+                              times=data.times[train_mask],
+                              routines=rids[train_mask])
     test_idx = np.asarray(sorted(test_dims), dtype=int)
 
     X_train, y_train = train_data.to_rows(per_dim=cfg.train_cfgs_per_dim,
                                           seed=cfg.seed)
     test_rows = GatheredData(dims=data.dims[test_idx], cfgs=data.cfgs,
-                             times=data.times[test_idx])
+                             times=data.times[test_idx],
+                             routines=rids[test_idx])
     X_test, y_test = test_rows.to_rows(per_dim=cfg.train_cfgs_per_dim,
                                        seed=cfg.seed + 1)
 
@@ -307,8 +394,8 @@ def install(backend: TimingBackend | None = None,
         fitted[name] = model
         test_pred = model.predict(Xt_test)
         t_eval_us = _measure_eval_time(model, pipe, len(data.cfgs))
-        (ideal_mean, ideal_agg, est_mean, est_agg,
-         warm_mean, warm_agg) = _speedups(
+        ((ideal_mean, ideal_agg, est_mean, est_agg,
+          warm_mean, warm_agg), per_routine) = _speedups(
             model, pipe, data, test_idx, cfg, t_eval_us * 1e-6)
         reports.append(ModelReport(
             name=name, params=best_params,
@@ -320,7 +407,8 @@ def install(backend: TimingBackend | None = None,
             est_mean_speedup=est_mean,
             est_aggregate_speedup=est_agg,
             warm_est_mean_speedup=warm_mean,
-            warm_est_aggregate_speedup=warm_agg))
+            warm_est_aggregate_speedup=warm_agg,
+            per_routine=per_routine))
         if verbose:
             print(f"[install] {name}: nrmse={reports[-1].normalised_rmse:.3f}"
                   f" est_mean={est_mean:.3f} warm={warm_mean:.3f}"
@@ -337,7 +425,8 @@ def install(backend: TimingBackend | None = None,
         # time so the runtime tuner starts with a hot memo cache instead
         # of paying t_eval on first sight of the trained-on shapes.
         warm_best = _predict_best_configs(fitted[selected], pipe,
-                                          data.dims, data.cfgs)
+                                          data.dims, data.cfgs,
+                                          routines=data.routine_ids())
         # paper Fig 2: "two files ... the configurations together with the
         # production-ready ML model"
         with open(os.path.join(artifact_dir, "config.json"), "w") as f:
@@ -355,12 +444,18 @@ def install(backend: TimingBackend | None = None,
                     "n_samples": cfg.n_samples,
                     "mem_limit_mb": cfg.mem_limit_mb,
                     "dtype_bytes": cfg.dtype_bytes,
-                    "repeats": cfg.repeats, "seed": cfg.seed},
+                    "repeats": cfg.repeats, "seed": cfg.seed,
+                    "routines": list(cfg.routines)},
                 "selection": [r.to_dict() for r in reports],
                 "selected": selected,
+                # v2: cache keys are (routine, m, k, n).  v1 blocks (no
+                # "version"/"routines") are still read by from_artifact
+                # as all-gemm entries.
                 "warm_start": {
+                    "version": 2,
                     "dims": np.asarray(data.dims,
                                        dtype=np.int64).tolist(),
+                    "routines": data.routine_names(),
                     "best": warm_best.astype(int).tolist()},
             }, f, indent=1)
         with open(os.path.join(artifact_dir, "model.json"), "w") as f:

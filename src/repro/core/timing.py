@@ -4,12 +4,13 @@ Two backends:
 
 * ``SimulatedBackend`` — the TPU v5e analytic model (costmodel.py).  The
   default on this CPU-only container; see DESIGN.md §Hardware adaptation.
-* ``MeasuredCPUBackend`` — real wall-clock timing of a K-blocked numpy
-  GEMM on the host.  The tunable knob with measurable effect on a single
-  CPU core is the K-panel chunk (cache blocking); it demonstrates the
-  full ADSALA pipeline against genuine measurements, reproducing the
-  paper's install procedure 1:1 (repeat loop, median, separate
-  configurations per run).
+  Covers all three BLAS-3 routines (gemm / syrk / trsm).
+* ``MeasuredCPUBackend`` — real wall-clock timing of K-blocked numpy
+  BLAS-3 routines on the host.  The tunable knob with measurable effect
+  on a single CPU core is the K-panel chunk (cache blocking); it
+  demonstrates the full ADSALA pipeline against genuine measurements,
+  reproducing the paper's install procedure 1:1 (repeat loop, median,
+  separate configurations per run).
 """
 
 from __future__ import annotations
@@ -25,40 +26,68 @@ from repro.core.costmodel import (
     GemmConfig,
     TPUSpec,
     estimate_batch_terms,
-    estimate_gemm_time,
+    estimate_routine_time,
+    routine_ids,
+    ROUTINES,
 )
 
 __all__ = ["TimingBackend", "SimulatedBackend", "MeasuredCPUBackend",
-           "time_gemm_grid"]
+           "time_gemm_grid", "time_routine_grid"]
 
 
 class TimingBackend(Protocol):
     def time_gemm(self, m: int, k: int, n: int, cfg: GemmConfig) -> float:
-        """One timed execution (seconds)."""
+        """One timed GEMM execution (seconds)."""
         ...
+
+
+def time_routine_grid(backend: "TimingBackend", dims: np.ndarray,
+                      cfgs: list[GemmConfig], repeats: int, *,
+                      routines=None) -> np.ndarray:
+    """Median-of-``repeats`` timing matrix, shape (D, C), for any backend.
+
+    ``routines`` is ``None`` (all gemm), one routine name, or one
+    name/id per dim.  Uses the backend's whole-grid batched path when it
+    has one (the simulated backend times every (dim x config) cell per
+    call); falls back to a scalar per-cell loop for measured backends,
+    where each execution is genuinely sequential wall-clock.
+    """
+    dims = np.asarray(dims, dtype=np.int64)
+    rids = routine_ids(routines, len(dims))
+    batch = getattr(backend, "time_routine_batch", None)
+    if batch is not None:
+        reps = np.stack([batch(dims, cfgs, routines=rids)
+                         for _ in range(repeats)])
+        return np.median(reps, axis=0)
+    legacy_batch = getattr(backend, "time_gemm_batch", None)
+    if legacy_batch is not None and not rids.any():
+        reps = np.stack([legacy_batch(dims, cfgs) for _ in range(repeats)])
+        return np.median(reps, axis=0)
+    scalar = getattr(backend, "time_routine", None)
+    times = np.empty((len(dims), len(cfgs)))
+    for i, (m, k, n) in enumerate(dims):
+        routine = ROUTINES[int(rids[i])]
+        for j, c in enumerate(cfgs):
+            if scalar is not None:
+                reps = [scalar(int(m), int(k), int(n), c, routine=routine)
+                        for _ in range(repeats)]
+            elif routine == "gemm":
+                reps = [backend.time_gemm(int(m), int(k), int(n), c)
+                        for _ in range(repeats)]
+            else:
+                raise TypeError(
+                    f"backend {type(backend).__name__} cannot time "
+                    f"routine {routine!r}: it has neither "
+                    "time_routine(_batch) nor a gemm-only grid")
+            times[i, j] = float(np.median(reps))
+    return times
 
 
 def time_gemm_grid(backend: "TimingBackend", dims: np.ndarray,
                    cfgs: list[GemmConfig], repeats: int) -> np.ndarray:
-    """Median-of-``repeats`` timing matrix, shape (D, C), for any backend.
-
-    Uses the backend's whole-grid batched path when it has one (the
-    simulated backend times every (dim x config) cell per call); falls
-    back to the scalar ``time_gemm`` loop for measured backends, where
-    each execution is genuinely sequential wall-clock.
-    """
-    batch = getattr(backend, "time_gemm_batch", None)
-    if batch is not None:
-        reps = np.stack([batch(dims, cfgs) for _ in range(repeats)])
-        return np.median(reps, axis=0)
-    dims = np.asarray(dims, dtype=np.int64)
-    times = np.empty((len(dims), len(cfgs)))
-    for i, (m, k, n) in enumerate(dims):
-        for j, c in enumerate(cfgs):
-            reps = [backend.time_gemm(int(m), int(k), int(n), c)
-                    for _ in range(repeats)]
-            times[i, j] = float(np.median(reps))
-    return times
+    """GEMM-only grid timing (the pre-routine API, kept for callers that
+    never mix routines)."""
+    return time_routine_grid(backend, dims, cfgs, repeats, routines=None)
 
 
 @dataclasses.dataclass
@@ -72,42 +101,66 @@ class SimulatedBackend:
     def __post_init__(self) -> None:
         self._rng = np.random.default_rng(self.seed)
 
-    def time_gemm(self, m: int, k: int, n: int, cfg: GemmConfig) -> float:
-        return estimate_gemm_time(m, k, n, cfg, self.spec,
-                                  dtype_bytes=self.dtype_bytes,
-                                  rng=self._rng).total_s
+    # -- routine-aware API -------------------------------------------------
+    def time_routine(self, m: int, k: int, n: int, cfg: GemmConfig, *,
+                     routine: str = "gemm") -> float:
+        return estimate_routine_time(m, k, n, cfg, self.spec,
+                                     routine=routine,
+                                     dtype_bytes=self.dtype_bytes,
+                                     rng=self._rng).total_s
 
-    def time_gemm_batch(self, dims: np.ndarray,
-                        cfgs: list[GemmConfig]) -> np.ndarray:
+    def time_routine_batch(self, dims: np.ndarray,
+                           cfgs: list[GemmConfig], *,
+                           routines=None) -> np.ndarray:
         """One noisy timing of every (dim x config) cell, shape (D, C).
 
         A single vectorised pass over the grid — the batched analogue of
-        calling :meth:`time_gemm` D*C times, drawing noise from the same
-        backend stream.
+        calling :meth:`time_routine` D*C times, drawing noise from the
+        same backend stream.  Rows may mix routines.
         """
         return estimate_batch_terms(dims, cfgs, self.spec,
                                     dtype_bytes=self.dtype_bytes,
-                                    rng=self._rng).total_s
+                                    rng=self._rng,
+                                    routines=routines).total_s
+
+    def time_routine_clean(self, m: int, k: int, n: int, cfg: GemmConfig,
+                           *, routine: str = "gemm") -> float:
+        """Noise-free ground truth (used by benchmarks for ideal speedup)."""
+        return estimate_routine_time(m, k, n, cfg, self.spec,
+                                     routine=routine,
+                                     dtype_bytes=self.dtype_bytes).total_s
+
+    def time_routine_clean_batch(self, dims: np.ndarray,
+                                 cfgs: list[GemmConfig], *,
+                                 routines=None) -> np.ndarray:
+        """Noise-free (D, C) ground-truth grid."""
+        return estimate_batch_terms(dims, cfgs, self.spec,
+                                    dtype_bytes=self.dtype_bytes,
+                                    routines=routines).total_s
+
+    # -- GEMM-only wrappers (pre-routine API) ------------------------------
+    def time_gemm(self, m: int, k: int, n: int, cfg: GemmConfig) -> float:
+        return self.time_routine(m, k, n, cfg, routine="gemm")
+
+    def time_gemm_batch(self, dims: np.ndarray,
+                        cfgs: list[GemmConfig]) -> np.ndarray:
+        return self.time_routine_batch(dims, cfgs, routines=None)
 
     def time_gemm_clean(self, m: int, k: int, n: int,
                         cfg: GemmConfig) -> float:
-        """Noise-free ground truth (used by benchmarks for ideal speedup)."""
-        return estimate_gemm_time(m, k, n, cfg, self.spec,
-                                  dtype_bytes=self.dtype_bytes).total_s
+        return self.time_routine_clean(m, k, n, cfg, routine="gemm")
 
     def time_gemm_clean_batch(self, dims: np.ndarray,
                               cfgs: list[GemmConfig]) -> np.ndarray:
-        """Noise-free (D, C) ground-truth grid."""
-        return estimate_batch_terms(dims, cfgs, self.spec,
-                                    dtype_bytes=self.dtype_bytes).total_s
+        return self.time_routine_clean_batch(dims, cfgs, routines=None)
 
 
 @dataclasses.dataclass
 class MeasuredCPUBackend:
-    """Wall-clock timing of a blocked numpy SGEMM on the host CPU.
+    """Wall-clock timing of blocked numpy BLAS-3 routines on the host CPU.
 
     cfg.tile[1] (bk) selects the K-panel size of an explicitly blocked
-    matmul — the single-core analogue of a cache-blocking parameter.
+    routine — the single-core analogue of a cache-blocking parameter.
     cfg.n_chips is ignored (one physical core in the container); the
     candidate set used with this backend holds n_chips=1.
     """
@@ -126,15 +179,54 @@ class MeasuredCPUBackend:
                 (r, c)).astype(np.float32)
         return self._buffers[key]
 
-    def time_gemm(self, m: int, k: int, n: int, cfg: GemmConfig) -> float:
+    def _triangular(self, d: int) -> np.ndarray:
+        """Well-conditioned lower-triangular operand for TRSM."""
+        key = (-d, d)
+        if key not in self._buffers:
+            a = np.tril(self._rng.standard_normal((d, d))).astype(
+                np.float32)
+            np.fill_diagonal(a, np.abs(np.diag(a)) + float(d))
+            self._buffers[key] = a
+        return self._buffers[key]
+
+    def time_routine(self, m: int, k: int, n: int, cfg: GemmConfig, *,
+                     routine: str = "gemm") -> float:
         m, k, n = (min(d, self.max_dim) for d in (m, k, n))
-        a = self._operand(m, k)
-        b = self._operand(k, n)
         bk = max(8, min(cfg.tile[1], k))
-        t0 = time.perf_counter()
-        c = np.zeros((m, n), dtype=np.float32)
-        for k0 in range(0, k, bk):
-            c += a[:, k0:k0 + bk] @ b[k0:k0 + bk, :]
-        dt = time.perf_counter() - t0
+        if routine == "gemm":
+            a, b = self._operand(m, k), self._operand(k, n)
+            t0 = time.perf_counter()
+            c = np.zeros((m, n), dtype=np.float32)
+            for k0 in range(0, k, bk):
+                c += a[:, k0:k0 + bk] @ b[k0:k0 + bk, :]
+            dt = time.perf_counter() - t0
+        elif routine == "syrk":
+            a = self._operand(m, k)
+            t0 = time.perf_counter()
+            c = np.zeros((m, m), dtype=np.float32)
+            for k0 in range(0, k, bk):
+                panel = a[:, k0:k0 + bk]
+                c += panel @ panel.T
+            c = np.tril(c)
+            dt = time.perf_counter() - t0
+        elif routine == "trsm":
+            # blocked forward substitution L X = B, panel size bk along M
+            bm = max(8, min(cfg.tile[1], m))
+            ell = self._triangular(m)
+            b = self._operand(m, n)
+            t0 = time.perf_counter()
+            x = b.copy()
+            for i0 in range(0, m, bm):
+                i1 = min(i0 + bm, m)
+                if i0:
+                    x[i0:i1] -= ell[i0:i1, :i0] @ x[:i0]
+                x[i0:i1] = np.linalg.solve(ell[i0:i1, i0:i1], x[i0:i1])
+            dt = time.perf_counter() - t0
+            c = x
+        else:
+            raise ValueError(f"unknown routine {routine!r}")
         del c
         return dt
+
+    def time_gemm(self, m: int, k: int, n: int, cfg: GemmConfig) -> float:
+        return self.time_routine(m, k, n, cfg, routine="gemm")

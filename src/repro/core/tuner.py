@@ -1,6 +1,6 @@
 """Runtime tuner (paper §III-C Fig 3 + §IV-A).
 
-Loads the installation artifact once, then per GEMM call predicts the
+Loads the installation artifact once, then per BLAS-3 call predicts the
 runtime of every candidate worker configuration and dispatches on the
 argmin.  Implements the paper's memoisation: "the software is designed to
 remember the last GEMM input and ML predictions; if the current GEMM
@@ -8,7 +8,20 @@ matrix dimensions are the same as the previous, the software will read
 and apply the predictions ... without re-evaluation."  Beyond the paper
 we keep a bounded LRU dict of *all* seen shapes, not just the last one
 (training loops interleave a handful of distinct GEMM shapes — the
-last-only cache thrashes; recorded in EXPERIMENTS.md §Perf).
+last-only cache thrashes; recorded in EXPERIMENTS.md §Perf), and the
+cache key is ``(routine, m, k, n)`` so gemm / syrk / trsm calls with the
+same dims never alias each other's choices.
+
+Artifact compatibility: installations written before the routine
+extension carry 19-column GEMM-only features and a v1 warm-start block.
+``from_artifact`` detects both (via the persisted ``feature_names``) and
+keeps serving them — gemm selections use the legacy feature layout, and
+asking such a tuner for syrk/trsm raises instead of silently feeding the
+model columns it was never fitted on.  The same guard applies to *new*
+artifacts installed over a subset of ROUTINES (the persisted
+``install.routines`` list): a gemm-only install has constant routine
+feature columns, so its model has no idea how syrk/trsm behave — the
+tuner refuses rather than hand out gemm-quality picks for them.
 """
 
 from __future__ import annotations
@@ -18,7 +31,7 @@ from typing import Any, Iterable
 
 import numpy as np
 
-from repro.core.costmodel import GemmConfig
+from repro.core.costmodel import GemmConfig, ROUTINES, routine_ids
 from repro.core.features import build_features
 from repro.core.installer import load_artifact
 from repro.core.preprocessing import PreprocessPipeline
@@ -27,6 +40,14 @@ __all__ = ["AdsalaTuner"]
 
 _PARTITIONS = ("M", "N", "K", "2D")
 
+#: cache / warm-start key: (routine, m, k, n)
+Key = tuple[str, int, int, int]
+
+
+def _normalise_routines(shapes: list, routines) -> list[str]:
+    """One routine name per shape, via the shared costmodel validator."""
+    return [ROUTINES[i] for i in routine_ids(routines, len(shapes))]
+
 
 class AdsalaTuner:
     """Predict-then-argmin worker-configuration selector."""
@@ -34,7 +55,9 @@ class AdsalaTuner:
     def __init__(self, model: Any, pipe: PreprocessPipeline,
                  candidates: list[GemmConfig], *,
                  max_chips: int | None = None,
-                 cache_size: int = 256) -> None:
+                 cache_size: int = 256,
+                 feature_names: list[str] | None = None,
+                 routines: tuple[str, ...] | None = None) -> None:
         if max_chips is not None:
             candidates = [c for c in candidates if c.n_chips <= max_chips]
         if not candidates:
@@ -43,11 +66,26 @@ class AdsalaTuner:
         self.pipe = pipe
         self.candidates = candidates
         self.cache_size = cache_size
+        # GEMM-only artifacts predate the routine feature columns; keep
+        # feeding their models the exact legacy layout.
+        self._legacy_features = (feature_names is not None
+                                 and "routine_syrk" not in feature_names)
+        # Routines the model was actually trained on (None = all):
+        # selections outside this set would be extrapolation the model
+        # has zero signal for, so they raise instead.
+        if self._legacy_features and routines is None:
+            routines = ("gemm",)
+        self.routines = tuple(ROUTINES) if routines is None \
+            else tuple(routines)
+        for r in self.routines:
+            if r not in ROUTINES:
+                raise ValueError(f"unknown routine {r!r}; "
+                                 f"expected one of {ROUTINES}")
         # key -> (config, predicted times).  times is None for warm-start
         # entries restored from the install artifact (only the argmin is
         # persisted); select_with_times lazily re-evaluates those.
         self._cache: collections.OrderedDict[
-            tuple[int, int, int], tuple[GemmConfig, np.ndarray | None]] = \
+            Key, tuple[GemmConfig, np.ndarray | None]] = \
             collections.OrderedDict()
         self.stats = {"calls": 0, "cache_hits": 0, "evaluations": 0}
         # pre-built candidate feature columns (constant across calls)
@@ -59,6 +97,10 @@ class AdsalaTuner:
     @classmethod
     def from_artifact(cls, artifact_dir: str, **kw: Any) -> "AdsalaTuner":
         model, pipe, cands, config = load_artifact(artifact_dir)
+        kw.setdefault("feature_names", config.get("feature_names"))
+        installed = config.get("install", {}).get("routines")
+        if installed is not None:
+            kw.setdefault("routines", tuple(installed))
         tuner = cls(model, pipe, cands, **kw)
         ws = config.get("warm_start")
         # A max_chips filter renumbers/narrows the candidate set, so the
@@ -70,17 +112,28 @@ class AdsalaTuner:
                 # install budget (400 dims): grow so the whole persisted
                 # warm set survives; an explicit cache_size wins.
                 tuner.cache_size = max(tuner.cache_size, len(ws["dims"]))
-            tuner.warm_start((tuple(d), cands[int(j)])
-                             for d, j in zip(ws["dims"], ws["best"]))
+            # v1 blocks (pre-routine artifacts) carry no "routines" list:
+            # every entry is a gemm choice.  v2 stores one routine per dim.
+            routines = ws.get("routines") or ["gemm"] * len(ws["dims"])
+            tuner.warm_start(
+                ((r, *d), cands[int(j)])
+                for r, d, j in zip(routines, ws["dims"], ws["best"]))
         return tuner
 
     # ------------------------------------------------------------------
+    def _key(self, m: int, k: int, n: int, routine: str = "gemm") -> Key:
+        return (routine, int(m), int(k), int(n))
+
     def warm_start(self, entries: Iterable[
-            tuple[tuple[int, int, int], GemmConfig]]) -> None:
+            tuple[tuple, GemmConfig]]) -> None:
         """Seed the memo cache with (shape -> config) choices computed at
-        install time (persisted in the artifact's ``warm_start`` block)."""
-        for (m, k, n), cfg in entries:
-            key = (int(m), int(k), int(n))
+        install time (persisted in the artifact's ``warm_start`` block).
+        Keys are ``(routine, m, k, n)``; bare 3-tuples mean gemm."""
+        for key, cfg in entries:
+            if len(key) == 3:
+                key = ("gemm", *key)
+            routine, m, k, n = key
+            key = self._key(m, k, n, routine)
             self._cache[key] = (cfg, None)
             self._cache.move_to_end(key)
         self._evict()
@@ -95,17 +148,28 @@ class AdsalaTuner:
     #: scalar loop (measured 118ms vs 60ms for 64 shapes x 76 candidates).
     _PREDICT_CHUNK = 16
 
-    def predicted_times_many(self, shapes: Iterable[tuple[int, int, int]]
-                             ) -> np.ndarray:
+    def predicted_times_many(self, shapes: Iterable[tuple[int, int, int]],
+                             routines=None) -> np.ndarray:
         """Predicted runtimes for every (shape x candidate), shape (S, C).
 
         Batched feature build + preprocess + model predict; chunked to
         ``_PREDICT_CHUNK`` shapes per predict call to stay cache-resident.
+        ``routines`` is None (all gemm), one name, or one name/id per
+        shape.
         """
         C = len(self.candidates)
         shapes = list(shapes)
         if not shapes:
             return np.empty((0, C))
+        names = _normalise_routines(shapes, routines)
+        unseen = sorted({r for r in names if r not in self.routines})
+        if unseen:
+            raise ValueError(
+                f"this artifact was installed for routines "
+                f"{self.routines}; it has no training signal for "
+                f"{unseen} — re-install with InstallConfig(routines=...) "
+                "to tune them")
+        rids = np.asarray([ROUTINES.index(r) for r in names], float)
         d = np.atleast_2d(np.asarray(shapes, dtype=np.float64))
         S = len(d)
         out = np.empty((S, C))
@@ -116,43 +180,53 @@ class AdsalaTuner:
                 np.repeat(chunk[:, 0], C), np.repeat(chunk[:, 1], C),
                 np.repeat(chunk[:, 2], C),
                 np.tile(self._chips, B), np.tile(self._tiles, B),
-                np.tile(self._parts, B))
+                np.tile(self._parts, B),
+                None if self._legacy_features
+                else np.repeat(rids[lo:lo + B], C).astype(np.int64))
             out[lo:lo + B] = np.exp(
                 self.model.predict(self.pipe.transform(X))).reshape(B, C)
         return out
 
-    def predicted_times(self, m: int, k: int, n: int) -> np.ndarray:
+    def predicted_times(self, m: int, k: int, n: int,
+                        routine: str = "gemm") -> np.ndarray:
         """Predicted runtime (seconds) for every candidate config."""
-        return self.predicted_times_many([(m, k, n)])[0]
+        return self.predicted_times_many([(m, k, n)],
+                                         routines=routine)[0]
 
-    def select(self, m: int, k: int, n: int) -> GemmConfig:
-        """Optimal worker configuration for this GEMM (memoised)."""
-        return self.select_many([(m, k, n)])[0]
+    def select(self, m: int, k: int, n: int,
+               routine: str = "gemm") -> GemmConfig:
+        """Optimal worker configuration for this routine call (memoised)."""
+        return self.select_many([(m, k, n)], routines=routine)[0]
 
-    def select_many(self, shapes: Iterable[tuple[int, int, int]]
-                    ) -> list[GemmConfig]:
+    def select_many(self, shapes: Iterable[tuple[int, int, int]],
+                    routines=None) -> list[GemmConfig]:
         """Optimal configuration per shape, via ONE batched evaluation.
 
         Cache-missed shapes are deduplicated and predicted together (a
         grouped/MoE dispatch with E experts costs one model call, not E);
-        hits keep the scalar path's LRU semantics.
+        hits keep the scalar path's LRU semantics.  ``routines`` follows
+        :meth:`predicted_times_many`.
         """
-        keys = [(int(m), int(k), int(n)) for m, k, n in shapes]
+        shapes = list(shapes)
+        names = _normalise_routines(shapes, routines)
+        keys = [self._key(m, k, n, r)
+                for (m, k, n), r in zip(shapes, names)]
         self.stats["calls"] += len(keys)
-        missing: list[tuple[int, int, int]] = []
-        seen: set[tuple[int, int, int]] = set()
+        missing: list[Key] = []
+        seen: set[Key] = set()
         for key in keys:
             if key not in self._cache and key not in seen:
                 seen.add(key)
                 missing.append(key)
         if missing:
             self.stats["evaluations"] += len(missing)
-            times = self.predicted_times_many(missing)
+            times = self.predicted_times_many(
+                [k[1:] for k in missing], routines=[k[0] for k in missing])
             best = np.argmin(times, axis=1)
             for key, j, t in zip(missing, best, times):
                 self._cache[key] = (self.candidates[int(j)], t)
         out = []
-        served: set[tuple[int, int, int]] = set()
+        served: set[Key] = set()
         for key in keys:
             # every occurrence beyond the one that paid an evaluation is
             # a cache hit, mirroring the scalar path's per-call counters
@@ -165,12 +239,13 @@ class AdsalaTuner:
         self._evict()
         return out
 
-    def select_with_times(self, m: int, k: int, n: int
+    def select_with_times(self, m: int, k: int, n: int,
+                          routine: str = "gemm"
                           ) -> tuple[GemmConfig, np.ndarray]:
-        self.select(m, k, n)     # populate cache + stats
-        key = (int(m), int(k), int(n))
+        self.select(m, k, n, routine)     # populate cache + stats
+        key = self._key(m, k, n, routine)
         cfg, times = self._cache[key]
         if times is None:          # warm-start entry: argmin only
-            times = self.predicted_times(m, k, n)
+            times = self.predicted_times(m, k, n, routine)
             self._cache[key] = (cfg, times)
         return cfg, times

@@ -15,16 +15,21 @@ from repro.kernels.ops import (
     grouped_matmul,
     matmul,
     resolve_backend,
+    syrk,
+    trsm,
 )
 from repro.kernels.ref import (
     flash_attention_ref,
     grouped_matmul_ref,
     matmul_ref,
+    syrk_ref,
+    trsm_ref,
 )
 
 __all__ = [
     "matmul_pallas", "grouped_matmul_pallas", "flash_attention_pallas",
-    "matmul", "grouped_matmul", "flash_attention", "dispatch_hint",
-    "grouped_dispatch_hint", "resolve_backend",
-    "matmul_ref", "grouped_matmul_ref", "flash_attention_ref",
+    "matmul", "syrk", "trsm", "grouped_matmul", "flash_attention",
+    "dispatch_hint", "grouped_dispatch_hint", "resolve_backend",
+    "matmul_ref", "syrk_ref", "trsm_ref", "grouped_matmul_ref",
+    "flash_attention_ref",
 ]

@@ -31,8 +31,8 @@ from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.grouped_matmul import grouped_matmul_pallas
 from repro.kernels.matmul import matmul_pallas
 
-__all__ = ["matmul", "grouped_matmul", "flash_attention", "dispatch_hint",
-           "grouped_dispatch_hint", "resolve_backend"]
+__all__ = ["matmul", "syrk", "trsm", "grouped_matmul", "flash_attention",
+           "dispatch_hint", "grouped_dispatch_hint", "resolve_backend"]
 
 Backend = Literal["auto", "pallas", "xla"]
 
@@ -58,18 +58,20 @@ def resolve_backend(backend: Backend = "auto") -> str:
 
 def _tile_for(m: int, k: int, n: int,
               tuner: AdsalaTuner | None,
-              tile: tuple[int, int, int] | None) -> tuple[int, int, int]:
+              tile: tuple[int, int, int] | None,
+              routine: str = "gemm") -> tuple[int, int, int]:
     if tile is not None:
         return tile
     if tuner is not None:
-        return tuner.select(m, k, n).tile
+        return tuner.select(m, k, n, routine).tile
     return DEFAULT_TILES[3]  # (256, 256, 256)
 
 
 def dispatch_hint(m: int, k: int, n: int,
-                  tuner: AdsalaTuner | None) -> GemmConfig | None:
-    """Worker configuration the tuner recommends for this GEMM (or None)."""
-    return tuner.select(m, k, n) if tuner is not None else None
+                  tuner: AdsalaTuner | None,
+                  routine: str = "gemm") -> GemmConfig | None:
+    """Worker configuration the tuner recommends for this call (or None)."""
+    return tuner.select(m, k, n, routine) if tuner is not None else None
 
 
 def grouped_dispatch_hint(shapes: list[tuple[int, int, int]],
@@ -123,6 +125,88 @@ def matmul(a: jax.Array, b: jax.Array, *,
     interp = (jax.default_backend() != "tpu") if interpret is None \
         else interpret
     return matmul_pallas(a, b, bm=bm, bk=bk, bn=bn, interpret=interp)
+
+
+def syrk(a: jax.Array, *,
+         tuner: AdsalaTuner | None = None,
+         tile: tuple[int, int, int] | None = None,
+         lower: bool = True,
+         backend: Backend = "auto",
+         interpret: bool | None = None) -> jax.Array:
+    """Symmetric rank-k update C = tril/triu(A @ Aᵀ), A of shape (m, k).
+
+    The Pallas path reuses the tuned matmul kernel and masks the output
+    to the written triangle (the kernel computes both halves; the
+    analytic cost model charges only the triangular fraction, which is
+    what a production SYRK kernel would execute).  Tuner lookups use
+    routine="syrk" on the (m, k, m) shape.
+    """
+    if a.ndim != 2:
+        raise ValueError(f"bad SYRK operand shape {a.shape}")
+    m, k = a.shape
+    be = resolve_backend(backend)
+    if be == "xla":
+        return ref.syrk_ref(a, lower=lower)
+    bm, bk, bn = _tile_for(m, k, m, tuner, tile, routine="syrk")
+    interp = (jax.default_backend() != "tpu") if interpret is None \
+        else interpret
+    c = matmul_pallas(a, a.T, bm=bm, bk=bk, bn=bn, interpret=interp,
+                      out_dtype=jnp.float32)
+    c = jnp.tril(c) if lower else jnp.triu(c)
+    return c.astype(a.dtype)
+
+
+def trsm(a: jax.Array, b: jax.Array, *,
+         tuner: AdsalaTuner | None = None,
+         tile: tuple[int, int, int] | None = None,
+         lower: bool = True,
+         unit_diag: bool = False,
+         backend: Backend = "auto",
+         interpret: bool | None = None) -> jax.Array:
+    """Triangular solve A X = B (A (m, m) triangular, B (m, n)).
+
+    The Pallas path is a blocked substitution: row panels of ``bm``
+    (from the tuned tile) retire in order — each one subtracts the
+    already-solved prefix via the tuned matmul kernel, then solves its
+    diagonal block against the jax.lax reference.  This mirrors the cost
+    model's sequential-dependency term (one dependent launch per M
+    panel).  Tuner lookups use routine="trsm" on the (m, m, n) shape.
+    """
+    if a.ndim != 2 or a.shape[0] != a.shape[1] or b.ndim != 2 \
+            or b.shape[0] != a.shape[0]:
+        raise ValueError(f"bad TRSM shapes {a.shape} x {b.shape}")
+    m = a.shape[0]
+    n = b.shape[1]
+    be = resolve_backend(backend)
+    if be == "xla":
+        return ref.trsm_ref(a, b, lower=lower, unit_diag=unit_diag)
+    bm, bk, bn = _tile_for(m, m, n, tuner, tile, routine="trsm")
+    interp = (jax.default_backend() != "tpu") if interpret is None \
+        else interpret
+    a32 = a.astype(jnp.float32)
+    b32 = b.astype(jnp.float32)
+    starts = list(range(0, m, bm))
+    if not lower:                 # backward substitution: bottom-up
+        starts = starts[::-1]
+    blocks: dict[int, jax.Array] = {}
+    for i0 in starts:
+        i1 = min(i0 + bm, m)
+        rhs = b32[i0:i1]
+        # subtract the already-solved panels' contribution in one tuned
+        # matmul over the concatenated prefix (suffix for upper)
+        done = [j0 for j0 in blocks if (j0 < i0 if lower else j0 > i0)]
+        if done:
+            done.sort()
+            cols = jnp.concatenate(
+                [a32[i0:i1, j0:min(j0 + bm, m)] for j0 in done], axis=1)
+            solved = jnp.concatenate([blocks[j0] for j0 in done], axis=0)
+            rhs = rhs - matmul_pallas(cols, solved, bm=bm, bk=bk, bn=bn,
+                                      interpret=interp)
+        blocks[i0] = jax.lax.linalg.triangular_solve(
+            a32[i0:i1, i0:i1], rhs, left_side=True, lower=lower,
+            unit_diagonal=unit_diag)
+    x = jnp.concatenate([blocks[i0] for i0 in sorted(blocks)], axis=0)
+    return x.astype(b.dtype)
 
 
 def grouped_matmul(x: jax.Array, w: jax.Array, *,

@@ -5,7 +5,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["matmul_ref", "grouped_matmul_ref", "flash_attention_ref"]
+__all__ = ["matmul_ref", "syrk_ref", "trsm_ref", "grouped_matmul_ref",
+           "flash_attention_ref"]
 
 
 def matmul_ref(a: jax.Array, b: jax.Array,
@@ -13,6 +14,26 @@ def matmul_ref(a: jax.Array, b: jax.Array,
     out = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
                   preferred_element_type=jnp.float32)
     return out.astype(out_dtype or a.dtype)
+
+
+def syrk_ref(a: jax.Array, *, lower: bool = True,
+             out_dtype: jnp.dtype | None = None) -> jax.Array:
+    """Symmetric rank-k update: the ``lower`` (or upper) triangle of
+    A @ Aᵀ; the untouched triangle is zero, as BLAS leaves it to C."""
+    c = jnp.dot(a.astype(jnp.float32), a.astype(jnp.float32).T,
+                preferred_element_type=jnp.float32)
+    c = jnp.tril(c) if lower else jnp.triu(c)
+    return c.astype(out_dtype or a.dtype)
+
+
+def trsm_ref(a: jax.Array, b: jax.Array, *, lower: bool = True,
+             unit_diag: bool = False,
+             out_dtype: jnp.dtype | None = None) -> jax.Array:
+    """Triangular solve A X = B for X, via jax.lax.linalg."""
+    x = jax.lax.linalg.triangular_solve(
+        a.astype(jnp.float32), b.astype(jnp.float32),
+        left_side=True, lower=lower, unit_diagonal=unit_diag)
+    return x.astype(out_dtype or b.dtype)
 
 
 def grouped_matmul_ref(x: jax.Array, w: jax.Array,

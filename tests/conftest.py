@@ -10,8 +10,11 @@
   property-test modules still collect and run.
 """
 
+import dataclasses
 import os
 import sys
+
+import pytest
 
 sys.path.insert(
     0, os.path.join(os.path.dirname(os.path.dirname(__file__)), "src"))
@@ -22,3 +25,36 @@ except ModuleNotFoundError:
     from repro._compat import hypothesis_fallback
 
     hypothesis_fallback.install()
+
+
+@dataclasses.dataclass
+class InstallRun:
+    """Everything a test needs from one shared install run."""
+
+    dir: str
+    cfg: object          # InstallConfig
+    backend: object      # SimulatedBackend
+    data: object         # GatheredData
+    report: object       # InstallReport
+
+
+@pytest.fixture(scope="session")
+def tiny_artifact(tmp_path_factory) -> InstallRun:
+    """One real, minimal-budget, mixed-routine install shared by
+    test_tuner, test_system and the routine property tests — replacing
+    the per-module ``install()`` runs that duplicated ~identical
+    artifacts."""
+    from repro.core import (InstallConfig, SimulatedBackend, gather_data,
+                            install)
+
+    d = tmp_path_factory.mktemp("tiny_artifact")
+    cfg = InstallConfig(
+        n_samples=48, repeats=2, tile_ids=(0, 3),
+        models=("linear_regression", "decision_tree", "xgboost"),
+        routines=("gemm", "syrk", "trsm"),
+        grid_budget="small", cv_splits=3, seed=0)
+    backend = SimulatedBackend(seed=0)
+    data = gather_data(backend, cfg)
+    report = install(backend, cfg, data=data, artifact_dir=str(d))
+    return InstallRun(dir=str(d), cfg=cfg, backend=backend, data=data,
+                      report=report)

@@ -54,6 +54,46 @@ def test_matmul_property_random_shapes(m, k, n):
                                atol=1e-4, rtol=1e-4)
 
 
+@pytest.mark.parametrize("m,k", [(64, 32), (100, 130), (33, 65), (8, 8)])
+@pytest.mark.parametrize("lower", [True, False])
+def test_syrk_matches_oracle(m, k, lower):
+    from repro.kernels import syrk, syrk_ref
+    a = _arr((m, k), jnp.float32)
+    out = syrk(a, lower=lower, backend="pallas", interpret=True,
+               tile=(32, 32, 32))
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(syrk_ref(a, lower=lower)),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("m,n,lower", [(64, 48, True), (100, 32, True),
+                                       (64, 48, False), (33, 17, False),
+                                       (16, 8, True)])
+def test_trsm_matches_oracle(m, n, lower):
+    from repro.kernels import trsm, trsm_ref
+    ell = np.tril(_RNG.standard_normal((m, m))).astype(np.float32)
+    np.fill_diagonal(ell, np.abs(np.diag(ell)) + m)   # well conditioned
+    a = jnp.asarray(ell if lower else ell.T)
+    b = _arr((m, n), jnp.float32)
+    out = trsm(a, b, lower=lower, backend="pallas", interpret=True,
+               tile=(32, 32, 32))
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(trsm_ref(a, b, lower=lower)),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_syrk_trsm_reject_bad_shapes():
+    from repro.kernels import syrk, trsm
+    with pytest.raises(ValueError, match="SYRK"):
+        syrk(_arr((2, 4, 4), jnp.float32), backend="xla")
+    with pytest.raises(ValueError, match="TRSM"):
+        trsm(_arr((4, 5), jnp.float32), _arr((4, 3), jnp.float32),
+             backend="xla")
+    with pytest.raises(ValueError, match="TRSM"):
+        trsm(_arr((4, 4), jnp.float32), _arr((5, 3), jnp.float32),
+             backend="xla")
+
+
 @pytest.mark.parametrize("e,c,d,f", [(4, 64, 32, 48), (2, 100, 64, 64),
                                      (8, 16, 16, 96)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -160,7 +200,7 @@ def test_grouped_matmul_group_sizes_refine_shapes():
                    backend="pallas", interpret=True)
     assert tuner.stats["calls"] == 3
     assert tuner.stats["evaluations"] == 3    # three distinct shapes
-    assert (32, 16, 24) in tuner._cache
+    assert ("gemm", 32, 16, 24) in tuner._cache
 
 
 def test_grouped_matmul_validates_group_sizes():
@@ -172,6 +212,24 @@ def test_grouped_matmul_validates_group_sizes():
         grouped_matmul(x, w, group_sizes=[32, 8, -1], backend="xla")
     with pytest.raises(ValueError, match="outside"):
         grouped_matmul(x, w, group_sizes=[32, 8, 33], backend="xla")
+
+
+def test_syrk_trsm_routine_tuner_dispatch():
+    """syrk/trsm consult the tuner under their own routine key — the
+    same dims as a gemm call never alias its cache entry."""
+    from repro.kernels import dispatch_hint, syrk, trsm
+    tuner = _stub_tuner()
+    a = _arr((32, 16), jnp.float32)
+    syrk(a, tuner=tuner, backend="pallas", interpret=True)
+    assert ("syrk", 32, 16, 32) in tuner._cache
+    ell = jnp.asarray(np.tril(np.ones((32, 32), np.float32)) +
+                      31 * np.eye(32, dtype=np.float32))
+    trsm(ell, _arr((32, 8), jnp.float32), tuner=tuner, backend="pallas",
+         interpret=True)
+    assert ("trsm", 32, 32, 8) in tuner._cache
+    hint = dispatch_hint(32, 16, 32, tuner, routine="syrk")
+    assert hint == tuner._cache[("syrk", 32, 16, 32)][0]
+    assert tuner.stats["evaluations"] == 2   # hint was a cache hit
 
 
 def test_grouped_dispatch_hint_uses_select_many():

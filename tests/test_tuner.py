@@ -6,11 +6,9 @@ import pytest
 from repro.core import (
     AdsalaTuner,
     GemmConfig,
-    InstallConfig,
-    SimulatedBackend,
     candidate_configs,
-    install,
 )
+from repro.core.features import LEGACY_FEATURE_NAMES
 
 
 class _StubModel:
@@ -44,7 +42,7 @@ def test_lru_eviction_at_cache_size():
     for s in shapes:
         t.select(*s)
     assert len(t._cache) == 4
-    assert (64, 64, 64) not in t._cache          # oldest evicted
+    assert ("gemm", 64, 64, 64) not in t._cache   # oldest evicted
     # re-selecting the evicted shape is a miss -> new evaluation
     before = t.stats["evaluations"]
     t.select(64, 64, 64)
@@ -58,8 +56,73 @@ def test_lru_move_to_end_recency():
         t.select(*s)
     t.select(*a)                                  # refresh a's recency
     t.select(*d)                                  # evicts b, not a
-    assert a in t._cache and b not in t._cache
-    assert list(t._cache) == [c, a, d]
+    ka, kb = ("gemm", *a), ("gemm", *b)
+    assert ka in t._cache and kb not in t._cache
+    assert list(t._cache) == [("gemm", *c), ka, ("gemm", *d)]
+
+
+def test_routines_have_distinct_cache_entries():
+    """gemm / syrk / trsm calls with the same dims never alias."""
+    t = _tuner()
+    for routine in ("gemm", "syrk", "trsm"):
+        t.select(256, 128, 256, routine)
+    assert t.stats == {"calls": 3, "cache_hits": 0, "evaluations": 3}
+    for routine in ("gemm", "syrk", "trsm"):
+        assert (routine, 256, 128, 256) in t._cache
+    # repeat calls hit per-routine entries
+    t.select(256, 128, 256, "trsm")
+    assert t.stats["cache_hits"] == 1
+
+
+def test_select_many_mixed_routines_matches_scalar():
+    shapes = [(64, 64, 64)] * 3
+    routines = ["gemm", "syrk", "trsm"]
+    batched = _tuner().select_many(shapes, routines=routines)
+    scalar = [_tuner().select(*s, routine=r)
+              for s, r in zip(shapes, routines)]
+    assert batched == scalar
+
+
+def test_select_many_rejects_routine_length_mismatch():
+    with pytest.raises(ValueError, match="one per"):
+        _tuner().select_many([(64, 64, 64)] * 2, routines=["gemm"])
+    with pytest.raises(ValueError, match="unknown routine"):
+        _tuner().select(64, 64, 64, "cholesky")
+
+
+def test_legacy_feature_artifact_refuses_new_routines():
+    """A pre-routine artifact (19-col features) keeps serving gemm but
+    raises for syrk/trsm instead of feeding the model unseen columns."""
+    t = AdsalaTuner(_StubModel(), _IdentityPipe(),
+                    candidate_configs(64, tiles=(0, 3)),
+                    feature_names=list(LEGACY_FEATURE_NAMES))
+    assert t.routines == ("gemm",)
+    cfg = t.select(512, 512, 512)          # legacy layout still works
+    assert cfg.n_chips == min(c.n_chips for c in t.candidates)
+    with pytest.raises(ValueError, match="no training signal"):
+        t.select(512, 512, 512, "syrk")
+
+
+def test_gemm_only_install_refuses_unseen_routines(tiny_artifact,
+                                                   tmp_path):
+    """A *new* artifact installed with routines=('gemm',) has constant
+    routine feature columns — its model never saw syrk/trsm vary, so
+    the tuner must refuse them rather than hand out gemm-quality
+    picks."""
+    import json
+    import shutil
+    gemm_only = tmp_path / "gemm_only_artifact"
+    shutil.copytree(tiny_artifact.dir, gemm_only)
+    cfg_path = gemm_only / "config.json"
+    config = json.load(open(cfg_path))
+    config["install"]["routines"] = ["gemm"]
+    json.dump(config, open(cfg_path, "w"))
+
+    tuner = AdsalaTuner.from_artifact(str(gemm_only))
+    assert tuner.routines == ("gemm",)
+    assert isinstance(tuner.select(512, 512, 512), GemmConfig)
+    with pytest.raises(ValueError, match="no training signal"):
+        tuner.select(512, 512, 512, "trsm")
 
 
 def test_stats_counters():
@@ -129,47 +192,64 @@ def test_warm_start_times_recomputed_lazily():
     assert t.candidates[int(np.argmin(times))] == cfg
 
 
-@pytest.fixture(scope="module")
-def small_artifact(tmp_path_factory):
-    d = tmp_path_factory.mktemp("tuner_artifact")
-    cfg = InstallConfig(n_samples=30, repeats=2, tile_ids=(0, 3),
-                        models=("linear_regression",),
-                        grid_budget="small", cv_splits=3, seed=0)
-    backend = SimulatedBackend(seed=0)
-    install(backend, cfg, artifact_dir=str(d))
-    return d
-
-
-def test_artifact_warm_start_round_trip(small_artifact):
+def test_artifact_warm_start_round_trip(tiny_artifact):
     import json
-    ws = json.load(open(small_artifact / "config.json"))["warm_start"]
-    assert len(ws["dims"]) == 30 and len(ws["best"]) == 30
+    n = tiny_artifact.cfg.n_samples
+    ws = json.load(
+        open(tiny_artifact.dir + "/config.json"))["warm_start"]
+    assert ws["version"] == 2
+    assert len(ws["dims"]) == n and len(ws["best"]) == n
+    assert set(ws["routines"]) == {"gemm", "syrk", "trsm"}
 
-    tuner = AdsalaTuner.from_artifact(str(small_artifact))
-    assert len(tuner._cache) == 30
-    m, k, n = ws["dims"][0]
-    cfg = tuner.select(m, k, n)
+    tuner = AdsalaTuner.from_artifact(tiny_artifact.dir)
+    assert len(tuner._cache) == n
+    m, k, n0 = ws["dims"][0]
+    routine = ws["routines"][0]
+    cfg = tuner.select(m, k, n0, routine)
     assert tuner.stats == {"calls": 1, "cache_hits": 1, "evaluations": 0}
     assert isinstance(cfg, GemmConfig)
     # the persisted choice must equal what a cold tuner would compute
-    cold = AdsalaTuner.from_artifact(str(small_artifact))
+    cold = AdsalaTuner.from_artifact(tiny_artifact.dir)
     cold._cache.clear()
-    assert cold.select(m, k, n) == cfg
+    assert cold.select(m, k, n0, routine) == cfg
+
+
+def test_artifact_v1_warm_start_loads_as_gemm(tiny_artifact, tmp_path):
+    """A pre-routine warm_start block (no version/routines keys) must
+    still preload — every entry keyed as a gemm choice."""
+    import json
+    import shutil
+    legacy = tmp_path / "v1_artifact"
+    shutil.copytree(tiny_artifact.dir, legacy)
+    cfg_path = legacy / "config.json"
+    config = json.load(open(cfg_path))
+    config["warm_start"] = {
+        "dims": config["warm_start"]["dims"],
+        "best": config["warm_start"]["best"]}
+    json.dump(config, open(cfg_path, "w"))
+
+    tuner = AdsalaTuner.from_artifact(str(legacy))
+    assert len(tuner._cache) == tiny_artifact.cfg.n_samples
+    assert all(key[0] == "gemm" for key in tuner._cache)
+    m, k, n = config["warm_start"]["dims"][0]
+    tuner.select(m, k, n)
+    assert tuner.stats == {"calls": 1, "cache_hits": 1, "evaluations": 0}
 
 
 def test_artifact_warm_start_skipped_when_candidates_filtered(
-        small_artifact):
-    tuner = AdsalaTuner.from_artifact(str(small_artifact), max_chips=8)
+        tiny_artifact):
+    tuner = AdsalaTuner.from_artifact(tiny_artifact.dir, max_chips=8)
     assert len(tuner._cache) == 0
     assert all(c.n_chips <= 8 for c in tuner.candidates)
 
 
-def test_artifact_warm_start_grows_default_cache(small_artifact):
+def test_artifact_warm_start_grows_default_cache(tiny_artifact):
     """A warm set larger than the default cache must survive intact
     (the default install budget, 400 dims, exceeds cache_size=256);
     an explicitly requested cache_size still wins."""
-    auto = AdsalaTuner.from_artifact(str(small_artifact))
-    assert auto.cache_size >= 30 and len(auto._cache) == 30
+    n = tiny_artifact.cfg.n_samples
+    auto = AdsalaTuner.from_artifact(tiny_artifact.dir)
+    assert auto.cache_size >= n and len(auto._cache) == n
 
-    capped = AdsalaTuner.from_artifact(str(small_artifact), cache_size=10)
+    capped = AdsalaTuner.from_artifact(tiny_artifact.dir, cache_size=10)
     assert capped.cache_size == 10 and len(capped._cache) == 10
