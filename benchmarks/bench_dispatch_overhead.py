@@ -1,0 +1,125 @@
+"""Dispatch-recorder overhead: is observability cheap enough to leave
+compiled into the serving hot path?
+
+Reports, as ``name,us_per_call,derived`` CSV lines:
+
+  * the raw :func:`repro.kernels.recorder.record` cost with no recorder
+    active (the permanent no-op tax every tagged call site pays) and
+    with one active;
+  * an *eager* decode serve step with recorder off vs on — the worst
+    case, since eager steps re-run every call site per token;
+  * a *jitted* decode step off vs on — the production case, where
+    recording happens at trace time only and steady-state cost must be
+    identical.
+
+``--smoke`` (used by the CI dispatch job) shrinks repetitions to
+seconds and asserts the recorder-off eager step is within noise of the
+recorder-on step.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import build_model, get_smoke_config
+from repro.kernels import recorder
+from repro.kernels.recorder import DispatchRecorder
+from repro.train.step import make_ctx
+
+
+def _best(fn, reps: int) -> float:
+    fn()  # warm
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(smoke: bool = False) -> list[str]:
+    lines = []
+    reps = 3 if smoke else 5
+    n_raw = 20_000 if smoke else 200_000
+
+    # --- raw record() path -------------------------------------------
+    def raw_inactive():
+        for _ in range(n_raw):
+            recorder.record("gemm", 64, 64, 64, site="bench")
+
+    def raw_active():
+        with DispatchRecorder():
+            for _ in range(n_raw):
+                recorder.record("gemm", 64, 64, 64, site="bench")
+
+    t_off = _best(raw_inactive, reps) / n_raw
+    t_on = _best(raw_active, reps) / n_raw
+    lines.append(f"record_noop,{t_off * 1e6:.4f},per_call")
+    lines.append(f"record_active,{t_on * 1e6:.4f},per_call")
+
+    # --- serve decode step, eager ------------------------------------
+    cfg = get_smoke_config("stablelm-1.6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cap = 32
+    dctx = make_ctx(None, "decode", cache_len=cap)
+    cache = model.init_cache(2, dctx)
+    tok = jnp.zeros((2, 1), jnp.int32)
+
+    def step():
+        logits, _ = model.decode_step(params, tok, cache, jnp.int32(4),
+                                      dctx)
+        logits.block_until_ready()
+
+    def step_recorded():
+        with DispatchRecorder():
+            step()
+
+    t_step_off = _best(step, reps)
+    t_step_on = _best(step_recorded, reps)
+    lines.append(f"eager_decode_recorder_off,{t_step_off * 1e6:.0f},wall")
+    lines.append(f"eager_decode_recorder_on,{t_step_on * 1e6:.0f},wall")
+    ratio = t_step_on / max(t_step_off, 1e-12)
+    lines.append(f"eager_decode_overhead,{ratio:.3f},on/off_ratio")
+    if smoke:
+        # CI rail only: the 2-core container jitters eager steps ~2x
+        # under concurrent load, so the full benchmark run just reports
+        assert ratio < 2.0, \
+            f"recorder-on eager decode {ratio:.2f}x slower"
+
+    # --- serve decode step, jitted (production) ----------------------
+    jstep = jax.jit(lambda p, t, c, pos: model.decode_step(p, t, c, pos,
+                                                           dctx))
+
+    def jit_off():
+        logits, _ = jstep(params, tok, cache, jnp.int32(4))
+        logits.block_until_ready()
+
+    with DispatchRecorder() as rec:
+        jit_off()          # trace happens here: events recorded once
+    n_traced = len(rec.events)
+
+    def jit_on():
+        with DispatchRecorder():
+            jit_off()
+
+    t_j_off = _best(jit_off, reps)
+    t_j_on = _best(jit_on, reps)
+    lines.append(f"jit_decode_recorder_off,{t_j_off * 1e6:.0f},wall")
+    lines.append(f"jit_decode_recorder_on,{t_j_on * 1e6:.0f},"
+                 f"wall_trace_events={n_traced}")
+    return lines
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv
+    for line in run(smoke=smoke):
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -49,6 +49,10 @@ def run(dryrun_dir: str = "results/dryrun",
         shape = SHAPES[rec["shape"]]
         rt = roofline_for_cell(cfg, shape, rec["mesh"], rec)
         note = _NOTES[(rt.dominant, shape.kind)]
+        # recorded per-cell dispatch mix (PR 4): fraction of the tagged
+        # contraction volume that is SYRK/TRSM-eligible (absent on
+        # dry-run artifacts predating the DispatchRecorder)
+        mix = rec.get("dispatch", {}).get("routine_mix", {})
         rows.append({
             "arch": rt.arch, "shape": rt.shape, "mesh": rt.mesh,
             "devices": rt.n_devices,
@@ -63,6 +67,9 @@ def run(dryrun_dir: str = "results/dryrun",
             "useful_ratio": rt.useful_ratio,
             "hlo_flops_per_dev": rt.hlo_flops_per_dev,
             "peak_gib": rt.peak_bytes / 2**30,
+            "routine_mix": mix,
+            "syrk_frac": mix.get("syrk", 0.0),
+            "trsm_frac": mix.get("trsm", 0.0),
             "note": note,
         })
     os.makedirs(os.path.dirname(out_path), exist_ok=True)
@@ -70,13 +77,15 @@ def run(dryrun_dir: str = "results/dryrun",
         json.dump(rows, f, indent=1)
     if csv:
         print("arch,shape,mesh,compute_ms,memory_ms,collective_ms,"
-              "dominant,roofline_fraction,useful_ratio,peak_gib")
+              "dominant,roofline_fraction,useful_ratio,peak_gib,"
+              "syrk_frac,trsm_frac")
         for r in rows:
             print(f"{r['arch']},{r['shape']},{r['mesh']},"
                   f"{r['compute_ms']:.3f},{r['memory_ms']:.3f},"
                   f"{r['collective_ms']:.3f},{r['dominant']},"
                   f"{r['roofline_fraction']:.3f},{r['useful_ratio']:.3f},"
-                  f"{r['peak_gib']:.2f}")
+                  f"{r['peak_gib']:.2f},"
+                  f"{r['syrk_frac']:.3f},{r['trsm_frac']:.3f}")
     return rows
 
 

@@ -17,6 +17,7 @@ def main() -> None:
         bench_ablation,
         bench_affinity,
         bench_breakdown,
+        bench_dispatch_overhead,
         bench_gflops_curve,
         bench_heatmap,
         bench_histogram,
@@ -31,6 +32,7 @@ def main() -> None:
     suites = [
         ("install_vectorised", bench_install_vectorised.run),
         ("routine_grid", bench_routine_grid.run),
+        ("dispatch_overhead", bench_dispatch_overhead.run),
         ("spec_derivation", bench_spec_derivation.run),
         ("fig1_fig8_histogram", bench_histogram.run),
         ("fig9_heatmap", bench_heatmap.run),

@@ -6,6 +6,7 @@ Pipeline:  halton -> timing backend -> features/preprocessing -> ml zoo
 """
 
 from repro.core.costmodel import (
+    DEFAULT_ROUTINE,
     DEFAULT_TILES,
     ROUTINES,
     TRSM_SEQ_CHIPS,
@@ -40,7 +41,8 @@ from repro.core.tuner import AdsalaTuner
 
 __all__ = [
     "TPUSpec", "GemmConfig", "TimeBreakdown", "BatchBreakdown",
-    "DEFAULT_TILES", "ROUTINES", "TRSM_SEQ_CHIPS", "candidate_configs",
+    "DEFAULT_TILES", "ROUTINES", "DEFAULT_ROUTINE", "TRSM_SEQ_CHIPS",
+    "candidate_configs",
     "estimate_gemm_time", "estimate_routine_time", "routine_ids",
     "estimate_batch", "estimate_batch_terms", "time_gemm_grid",
     "time_routine_grid",

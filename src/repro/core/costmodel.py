@@ -46,11 +46,17 @@ __all__ = [
     "TPUSpec", "GemmConfig", "TimeBreakdown", "BatchBreakdown",
     "candidate_configs", "config_arrays", "estimate_gemm_time",
     "estimate_routine_time", "estimate_batch_terms", "estimate_batch",
-    "DEFAULT_TILES", "ROUTINES", "TRSM_SEQ_CHIPS", "routine_ids",
+    "DEFAULT_TILES", "ROUTINES", "DEFAULT_ROUTINE", "TRSM_SEQ_CHIPS",
+    "routine_ids",
 ]
 
 #: BLAS-3 routines the stack understands; index = routine id feature.
 ROUTINES: tuple[str, ...] = ("gemm", "syrk", "trsm")
+
+#: The explicit default/fallback routine.  Call sites that don't tag a
+#: routine dispatch as this, and tuners whose artifact lacks signal for
+#: a requested routine fall back to it — always ROUTINES[0].
+DEFAULT_ROUTINE: str = ROUTINES[0]
 
 #: Max chips that help along TRSM's sequential (M) dimension — the
 #: substitution pipeline depth.  Chips beyond this idle on that axis.

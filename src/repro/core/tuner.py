@@ -124,6 +124,15 @@ class AdsalaTuner:
     def _key(self, m: int, k: int, n: int, routine: str = "gemm") -> Key:
         return (routine, int(m), int(k), int(n))
 
+    def peek(self, m: int, k: int, n: int,
+             routine: str = "gemm") -> bool:
+        """True when ``(routine, m, k, n)`` is already memoised — the
+        next :meth:`select` for it will be a cache hit with no model
+        evaluation.  Observability only: touches neither the LRU
+        recency order nor the stats counters (the DispatchRecorder uses
+        this to label events without perturbing what it measures)."""
+        return self._key(m, k, n, routine) in self._cache
+
     def warm_start(self, entries: Iterable[
             tuple[tuple, GemmConfig]]) -> None:
         """Seed the memo cache with (shape -> config) choices computed at

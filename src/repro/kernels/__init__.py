@@ -3,6 +3,8 @@
 matmul          — tiled MXU matmul, tile = ADSALA worker-config axis
 grouped_matmul  — expert-batched MoE GEMM over capacity buckets
 flash_attention — online-softmax blocked attention (causal / windowed)
+recorder        — DispatchRecorder: observe (routine, m, k, n, config,
+                  cache_hit) per dispatch on the current thread
 """
 
 from repro.kernels.flash_attention import flash_attention_pallas
@@ -14,10 +16,13 @@ from repro.kernels.ops import (
     grouped_dispatch_hint,
     grouped_matmul,
     matmul,
+    observe,
     resolve_backend,
+    supported_routine,
     syrk,
     trsm,
 )
+from repro.kernels.recorder import DispatchEvent, DispatchRecorder
 from repro.kernels.ref import (
     flash_attention_ref,
     grouped_matmul_ref,
@@ -29,7 +34,9 @@ from repro.kernels.ref import (
 __all__ = [
     "matmul_pallas", "grouped_matmul_pallas", "flash_attention_pallas",
     "matmul", "syrk", "trsm", "grouped_matmul", "flash_attention",
-    "dispatch_hint", "grouped_dispatch_hint", "resolve_backend",
+    "dispatch_hint", "grouped_dispatch_hint", "observe",
+    "resolve_backend", "supported_routine",
+    "DispatchEvent", "DispatchRecorder",
     "matmul_ref", "syrk_ref", "trsm_ref", "grouped_matmul_ref",
     "flash_attention_ref",
 ]

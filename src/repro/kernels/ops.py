@@ -9,11 +9,21 @@ points the model layers call.  Backend selection:
     hosts and inside the multi-pod dry-run, where XLA's SPMD partitioner
     handles the sharded einsums and Mosaic kernels cannot lower.
 
-When an :class:`~repro.core.tuner.AdsalaTuner` is supplied, the GEMM's
-(m, k, n) is looked up per call (memoised inside the tuner) and the
-chosen worker configuration supplies the kernel tile; the chosen chip
-count / partition axis is exposed via :func:`dispatch_hint` for the
+When an :class:`~repro.core.tuner.AdsalaTuner` is supplied, the call's
+(routine, m, k, n) is looked up per call (memoised inside the tuner) and
+the chosen worker configuration supplies the kernel tile; the chosen
+chip count / partition axis is exposed via :func:`dispatch_hint` for the
 distribution layer to turn into sharding constraints.
+
+Every routine-aware entry point also reports its dispatch — the
+*resolved* routine, shape, chosen config and whether the tuner served
+it from cache — to any active
+:class:`~repro.kernels.recorder.DispatchRecorder`.  Routine names are
+validated here at the ops boundary (unknown strings fail loudly), and a
+routine the tuner's artifact carries no training signal for degrades to
+the explicit :data:`~repro.core.costmodel.DEFAULT_ROUTINE` gemm
+fallback instead of raising — a v1 gemm-only artifact keeps serving
+models whose call sites are routine-tagged.
 """
 
 from __future__ import annotations
@@ -24,15 +34,21 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
-from repro.core.costmodel import DEFAULT_TILES, GemmConfig
+from repro.core.costmodel import (
+    DEFAULT_ROUTINE,
+    DEFAULT_TILES,
+    ROUTINES,
+    GemmConfig,
+)
 from repro.core.tuner import AdsalaTuner
-from repro.kernels import ref
+from repro.kernels import recorder, ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.grouped_matmul import grouped_matmul_pallas
 from repro.kernels.matmul import matmul_pallas
 
 __all__ = ["matmul", "syrk", "trsm", "grouped_matmul", "flash_attention",
-           "dispatch_hint", "grouped_dispatch_hint", "resolve_backend"]
+           "dispatch_hint", "grouped_dispatch_hint", "observe",
+           "resolve_backend", "supported_routine"]
 
 Backend = Literal["auto", "pallas", "xla"]
 
@@ -56,27 +72,88 @@ def resolve_backend(backend: Backend = "auto") -> str:
     return "pallas" if jax.default_backend() == "tpu" else "xla"
 
 
-def _tile_for(m: int, k: int, n: int,
-              tuner: AdsalaTuner | None,
-              tile: tuple[int, int, int] | None,
-              routine: str = "gemm") -> tuple[int, int, int]:
-    if tile is not None:
-        return tile
-    if tuner is not None:
-        return tuner.select(m, k, n, routine).tile
-    return DEFAULT_TILES[3]  # (256, 256, 256)
+def supported_routine(routine: str, tuner: AdsalaTuner | None) -> str:
+    """The routine a call site can actually dispatch.
+
+    Validates the name against :data:`ROUTINES` (unknown strings raise
+    here, at the ops boundary, with the full expected set), then falls
+    back to the explicit gemm :data:`DEFAULT_ROUTINE` when the tuner's
+    artifact was installed without ``routine`` — legacy/v1 artifacts
+    and subset installs keep serving instead of raising from deep
+    inside a model layer.
+    """
+    if routine not in ROUTINES:
+        raise ValueError(
+            f"unknown routine {routine!r}; expected one of {ROUTINES}")
+    if tuner is not None and routine not in tuner.routines:
+        return DEFAULT_ROUTINE
+    return routine
+
+
+def _select(m: int, k: int, n: int, routine: str,
+            tuner: AdsalaTuner | None, *, need_config: bool
+            ) -> tuple[str, GemmConfig | None, bool]:
+    """(resolved routine, tuner config | None, cache_hit) for one call.
+
+    The tuner is consulted when the kernel needs a tile
+    (``need_config``) or a recorder wants the chosen config on the
+    event; otherwise (xla path, nobody watching) the lookup is skipped
+    so untuned dispatch stays free.
+    """
+    routine = supported_routine(routine, tuner)
+    if tuner is None or not (need_config or recorder.active()):
+        return routine, None, False
+    hit = tuner.peek(m, k, n, routine)
+    return routine, tuner.select(m, k, n, routine), hit
 
 
 def dispatch_hint(m: int, k: int, n: int,
                   tuner: AdsalaTuner | None,
-                  routine: str = "gemm") -> GemmConfig | None:
-    """Worker configuration the tuner recommends for this call (or None)."""
-    return tuner.select(m, k, n, routine) if tuner is not None else None
+                  routine: str = DEFAULT_ROUTINE,
+                  site: str = "", count: int = 1) -> GemmConfig | None:
+    """Worker configuration the tuner recommends for this call (or None).
+
+    Doubles as the observability point for contractions that don't go
+    through an ops kernel (einsum call sites in the model layers): the
+    resolved routine identity is reported to any active
+    DispatchRecorder, with the gemm fallback applied when the artifact
+    has no signal for ``routine``.
+    """
+    routine = supported_routine(routine, tuner)
+    cfg, hit = None, False
+    if tuner is not None:
+        hit = tuner.peek(m, k, n, routine)
+        cfg = tuner.select(m, k, n, routine)
+    recorder.record(routine, m, k, n, config=cfg, cache_hit=hit,
+                    site=site, count=count)
+    return cfg
+
+
+def observe(m: int, k: int, n: int,
+            tuner: AdsalaTuner | None,
+            routine: str = DEFAULT_ROUTINE,
+            site: str = "", count: int = 1) -> None:
+    """Observability-only twin of :func:`dispatch_hint`.
+
+    The model-layer einsum call sites discard the hint — they only
+    exist so a recorder can see the contraction's routine identity.
+    Unlike ``dispatch_hint`` (whose contract is to *return* the tuner's
+    recommendation), this consults the tuner only while a recorder is
+    active, so eager untuned/unwatched dispatch pays nothing beyond the
+    routine-name validation and the tuner's LRU never fills with fused
+    hint shapes that are not real kernel dispatches.
+    """
+    if not recorder.active():
+        supported_routine(routine, tuner)   # still fail loudly on typos
+        return
+    dispatch_hint(m, k, n, tuner, routine, site, count)
 
 
 def grouped_dispatch_hint(shapes: list[tuple[int, int, int]],
                           tuner: AdsalaTuner | None, *,
-                          n_experts: int | None = None
+                          n_experts: int | None = None,
+                          routine: str = DEFAULT_ROUTINE,
+                          site: str = "grouped"
                           ) -> list[GemmConfig] | None:
     """Per-expert worker configurations for a grouped (MoE) dispatch.
 
@@ -84,74 +161,96 @@ def grouped_dispatch_hint(shapes: list[tuple[int, int, int]],
     (:meth:`AdsalaTuner.select_many`) instead of per-expert scalar calls.
     ``n_experts`` (when known) guards against a shape list covering only
     a prefix of the experts — a silent truncation would hand later
-    experts no hint at all.
+    experts no hint at all.  One event per expert shape is reported to
+    any active recorder.
     """
     shapes = list(shapes)
     if n_experts is not None and len(shapes) != n_experts:
         raise ValueError(
             f"grouped dispatch got {len(shapes)} GEMM shapes for "
             f"{n_experts} experts; every expert needs a shape")
-    return tuner.select_many(shapes) if tuner is not None else None
-
-
-def _grouped_tile_for(shapes: list[tuple[int, int, int]],
-                      tuner: AdsalaTuner | None,
-                      tile: tuple[int, int, int] | None
-                      ) -> tuple[int, int, int]:
-    if tile is not None:
-        return tile
-    if not shapes:
-        raise ValueError("grouped dispatch needs at least one GEMM shape")
+    routine = supported_routine(routine, tuner)
+    cfgs = None
     if tuner is not None:
-        cfgs = tuner.select_many(shapes)
-        # one kernel tile serves every expert; use the config chosen for
-        # the cost-dominant per-expert GEMM (largest m*k*n, not just m —
-        # hint shapes may be heterogeneous in every dim)
-        big = max(range(len(shapes)),
-                  key=lambda i: shapes[i][0] * shapes[i][1] * shapes[i][2])
-        return cfgs[big].tile
-    return DEFAULT_TILES[3]  # (256, 256, 256)
+        hits = [tuner.peek(m, k, n, routine) for m, k, n in shapes]
+        cfgs = tuner.select_many(shapes, routines=routine)
+    else:
+        hits = [False] * len(shapes)
+    if recorder.active():
+        for (m, k, n), hit, cfg in zip(
+                shapes, hits, cfgs or [None] * len(shapes)):
+            recorder.record(routine, m, k, n, config=cfg, cache_hit=hit,
+                            site=site)
+    return cfgs
 
 
 def matmul(a: jax.Array, b: jax.Array, *,
            tuner: AdsalaTuner | None = None,
            tile: tuple[int, int, int] | None = None,
            backend: Backend = "auto",
-           interpret: bool | None = None) -> jax.Array:
+           interpret: bool | None = None,
+           site: str = "", count: int = 1) -> jax.Array:
     be = resolve_backend(backend)
+    m, k, n = int(a.shape[0]), int(a.shape[1]), int(b.shape[1])
+    # an explicit tile overrides the tuner entirely: don't consult it,
+    # and don't label the event with a config that was never dispatched
+    rt, cfg, hit = _select(m, k, n, DEFAULT_ROUTINE,
+                           tuner if tile is None else None,
+                           need_config=be != "xla")
+    recorder.record(rt, m, k, n, config=cfg, cache_hit=hit, site=site,
+                    count=count)
     if be == "xla":
         return ref.matmul_ref(a, b)
-    bm, bk, bn = _tile_for(a.shape[0], a.shape[1], b.shape[1], tuner, tile)
+    bm, bk, bn = (tile if tile is not None
+                  else cfg.tile if cfg is not None else DEFAULT_TILES[3])
     interp = (jax.default_backend() != "tpu") if interpret is None \
         else interpret
     return matmul_pallas(a, b, bm=bm, bk=bk, bn=bn, interpret=interp)
 
 
-def syrk(a: jax.Array, *,
+def syrk(a: jax.Array, b: jax.Array | None = None, *,
          tuner: AdsalaTuner | None = None,
          tile: tuple[int, int, int] | None = None,
          lower: bool = True,
          backend: Backend = "auto",
-         interpret: bool | None = None) -> jax.Array:
+         interpret: bool | None = None,
+         site: str = "", count: int = 1) -> jax.Array:
     """Symmetric rank-k update C = tril/triu(A @ Aᵀ), A of shape (m, k).
+
+    With ``b`` (same shape as A) this is the SYRK-*shaped* product
+    C = tril/triu(A @ Bᵀ): only one triangle of the square output is
+    produced, so it prices — and dispatches — as SYRK even though the
+    operands differ.  Causal self-attention scores (QKᵀ consumed under
+    a triangular mask) are the serving-path instance.
 
     The Pallas path reuses the tuned matmul kernel and masks the output
     to the written triangle (the kernel computes both halves; the
     analytic cost model charges only the triangular fraction, which is
     what a production SYRK kernel would execute).  Tuner lookups use
-    routine="syrk" on the (m, k, m) shape.
+    routine="syrk" on the (m, k, m) shape, degrading to gemm on
+    artifacts without syrk signal.
     """
     if a.ndim != 2:
         raise ValueError(f"bad SYRK operand shape {a.shape}")
-    m, k = a.shape
+    if b is not None and b.shape != a.shape:
+        raise ValueError(
+            f"bad SYRK-shaped operands {a.shape} x {b.shape}; B must "
+            "match A (square output, shared k)")
+    m, k = int(a.shape[0]), int(a.shape[1])
     be = resolve_backend(backend)
+    rt, cfg, hit = _select(m, k, m, "syrk",
+                           tuner if tile is None else None,
+                           need_config=be != "xla")
+    recorder.record(rt, m, k, m, config=cfg, cache_hit=hit, site=site,
+                    count=count)
     if be == "xla":
-        return ref.syrk_ref(a, lower=lower)
-    bm, bk, bn = _tile_for(m, k, m, tuner, tile, routine="syrk")
+        return ref.syrk_ref(a, b, lower=lower)
+    bm, bk, bn = (tile if tile is not None
+                  else cfg.tile if cfg is not None else DEFAULT_TILES[3])
     interp = (jax.default_backend() != "tpu") if interpret is None \
         else interpret
-    c = matmul_pallas(a, a.T, bm=bm, bk=bk, bn=bn, interpret=interp,
-                      out_dtype=jnp.float32)
+    c = matmul_pallas(a, (a if b is None else b).T, bm=bm, bk=bk, bn=bn,
+                      interpret=interp, out_dtype=jnp.float32)
     c = jnp.tril(c) if lower else jnp.triu(c)
     return c.astype(a.dtype)
 
@@ -162,7 +261,8 @@ def trsm(a: jax.Array, b: jax.Array, *,
          lower: bool = True,
          unit_diag: bool = False,
          backend: Backend = "auto",
-         interpret: bool | None = None) -> jax.Array:
+         interpret: bool | None = None,
+         site: str = "", count: int = 1) -> jax.Array:
     """Triangular solve A X = B (A (m, m) triangular, B (m, n)).
 
     The Pallas path is a blocked substitution: row panels of ``bm``
@@ -170,17 +270,24 @@ def trsm(a: jax.Array, b: jax.Array, *,
     already-solved prefix via the tuned matmul kernel, then solves its
     diagonal block against the jax.lax reference.  This mirrors the cost
     model's sequential-dependency term (one dependent launch per M
-    panel).  Tuner lookups use routine="trsm" on the (m, m, n) shape.
+    panel).  Tuner lookups use routine="trsm" on the (m, m, n) shape,
+    degrading to gemm on artifacts without trsm signal.
     """
     if a.ndim != 2 or a.shape[0] != a.shape[1] or b.ndim != 2 \
             or b.shape[0] != a.shape[0]:
         raise ValueError(f"bad TRSM shapes {a.shape} x {b.shape}")
-    m = a.shape[0]
-    n = b.shape[1]
+    m = int(a.shape[0])
+    n = int(b.shape[1])
     be = resolve_backend(backend)
+    rt, cfg, hit = _select(m, m, n, "trsm",
+                           tuner if tile is None else None,
+                           need_config=be != "xla")
+    recorder.record(rt, m, m, n, config=cfg, cache_hit=hit, site=site,
+                    count=count)
     if be == "xla":
         return ref.trsm_ref(a, b, lower=lower, unit_diag=unit_diag)
-    bm, bk, bn = _tile_for(m, m, n, tuner, tile, routine="trsm")
+    bm, bk, bn = (tile if tile is not None
+                  else cfg.tile if cfg is not None else DEFAULT_TILES[3])
     interp = (jax.default_backend() != "tpu") if interpret is None \
         else interpret
     a32 = a.astype(jnp.float32)
@@ -213,6 +320,8 @@ def grouped_matmul(x: jax.Array, w: jax.Array, *,
                    tuner: AdsalaTuner | None = None,
                    tile: tuple[int, int, int] | None = None,
                    group_sizes: list[int] | None = None,
+                   routine: str = DEFAULT_ROUTINE,
+                   site: str = "grouped",
                    backend: Backend = "auto",
                    interpret: bool | None = None) -> jax.Array:
     """Y[e] = X[e] @ W[e] with tuner-selected tiling.
@@ -220,6 +329,8 @@ def grouped_matmul(x: jax.Array, w: jax.Array, *,
     ``group_sizes`` (actual tokens routed per expert, <= capacity) refines
     the per-expert GEMM shapes the tuner sees; with or without it, all E
     experts resolve through a single batched ``select_many`` lookup.
+    Each per-expert shape is reported to any active recorder as its own
+    event (the MoE dispatch volume is per-expert, not per-kernel).
     """
     be = resolve_backend(backend)
     e, c, d = x.shape
@@ -234,13 +345,38 @@ def grouped_matmul(x: jax.Array, w: jax.Array, *,
         if any(g < 0 or g > c for g in group_sizes):
             raise ValueError(
                 f"group_sizes {group_sizes} outside [0, capacity={c}]")
-    if be == "xla":
-        return ref.grouped_matmul_ref(x, w)
     # an expert with zero routed tokens still runs its capacity bucket;
     # query the tuner with at least one row so the shape stays sensible
-    shapes = ([(max(int(g), 1), d, f) for g in group_sizes]
-              if group_sizes is not None else [(c, d, f)] * e)
-    bm, bk, bn = _grouped_tile_for(shapes, tuner, tile)
+    shapes = ([(max(int(g), 1), int(d), int(f)) for g in group_sizes]
+              if group_sizes is not None
+              else [(int(c), int(d), int(f))] * int(e))
+    consult = tuner if tile is None else None
+    rt = supported_routine(routine, consult)
+    cfgs = None
+    want_events = recorder.active()
+    if consult is not None and (be != "xla" or want_events):
+        hits = [consult.peek(m_, k_, n_, rt) for m_, k_, n_ in shapes]
+        cfgs = consult.select_many(shapes, routines=rt)
+    else:
+        hits = [False] * len(shapes)
+    if want_events:
+        for (m_, k_, n_), hit, cfg in zip(
+                shapes, hits, cfgs or [None] * len(shapes)):
+            recorder.record(rt, m_, k_, n_, config=cfg, cache_hit=hit,
+                            site=site)
+    if be == "xla":
+        return ref.grouped_matmul_ref(x, w)
+    if tile is not None:
+        bm, bk, bn = tile
+    elif cfgs is not None:
+        # one kernel tile serves every expert; use the config chosen for
+        # the cost-dominant per-expert GEMM (largest m*k*n, not just m —
+        # hint shapes may be heterogeneous in every dim)
+        big = max(range(len(shapes)),
+                  key=lambda i: shapes[i][0] * shapes[i][1] * shapes[i][2])
+        bm, bk, bn = cfgs[big].tile
+    else:
+        bm, bk, bn = DEFAULT_TILES[3]  # (256, 256, 256)
     interp = (jax.default_backend() != "tpu") if interpret is None \
         else interpret
     return grouped_matmul_pallas(x, w, bm=bm, bk=bk, bn=bn, interpret=interp)

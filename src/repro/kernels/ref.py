@@ -16,11 +16,18 @@ def matmul_ref(a: jax.Array, b: jax.Array,
     return out.astype(out_dtype or a.dtype)
 
 
-def syrk_ref(a: jax.Array, *, lower: bool = True,
+def syrk_ref(a: jax.Array, b: jax.Array | None = None, *,
+             lower: bool = True,
              out_dtype: jnp.dtype | None = None) -> jax.Array:
     """Symmetric rank-k update: the ``lower`` (or upper) triangle of
-    A @ Aᵀ; the untouched triangle is zero, as BLAS leaves it to C."""
-    c = jnp.dot(a.astype(jnp.float32), a.astype(jnp.float32).T,
+    A @ Aᵀ; the untouched triangle is zero, as BLAS leaves it to C.
+
+    With ``b`` (same shape as A) this is the SYRK-*shaped* product
+    tril/triu(A @ Bᵀ) — only one triangle of the square output is
+    produced, which is what a causal self-attention score matrix
+    consumes."""
+    b = a if b is None else b
+    c = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32).T,
                 preferred_element_type=jnp.float32)
     c = jnp.tril(c) if lower else jnp.triu(c)
     return c.astype(out_dtype or a.dtype)

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, build_model, get_config
 from repro.dist.sharding import named_shardings
+from repro.kernels.recorder import DispatchRecorder
 from repro.launch.mesh import make_production_mesh
 from repro.models.config import SHAPES, ShapeSpec
 from repro.serve.step import (
@@ -174,7 +175,12 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
               and shape_name.startswith("train") else ())
     jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                      donate_argnums=donate)
-    lowered = jitted.lower(*args)
+    # the routine-aware call sites report their dispatches at trace
+    # time, so wrapping .lower() yields the cell's per-call-site
+    # routine mix — how much of this arch's dispatch volume is
+    # SYRK/TRSM-eligible — with zero extra compile work
+    with DispatchRecorder() as rec:
+        lowered = jitted.lower(*args)
     t_lower = time.time() - t0
     t0 = time.time()
     compiled = lowered.compile()
@@ -182,6 +188,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # older jax: one dict per exec
+        cost = cost[0] if cost else {}
     colls = parse_collectives(compiled.as_text())
     shape = SHAPES[shape_name]
     n_tok = (shape.tokens if shape.kind != "decode"
@@ -195,13 +203,26 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             "argument_bytes": mem.argument_size_in_bytes,
             "output_bytes": mem.output_size_in_bytes,
             "temp_bytes": mem.temp_size_in_bytes,
-            "peak_bytes": mem.peak_memory_in_bytes,
+            # CPU-backed jax builds expose no peak stat; args+temp is
+            # the live-set upper bound the roofline needs
+            "peak_bytes": getattr(
+                mem, "peak_memory_in_bytes",
+                mem.argument_size_in_bytes + mem.temp_size_in_bytes),
         },
         "cost": {
             "flops_per_device": cost.get("flops", 0.0),
             "bytes_per_device": cost.get("bytes accessed", 0.0),
         },
         "collectives": colls,
+        # trace-time dispatch observability (events are per call site
+        # per trace: scanned layer stacks count once per unit layer —
+        # a routine *mix*, not an absolute count)
+        "dispatch": {
+            "events": len(rec.events),
+            "routine_mix": rec.routine_mix(),
+            "routine_mix_events": rec.routine_mix(by="events"),
+            "summary": rec.summary(),
+        },
         "model": {
             "params": cfg.param_count(),
             "active_params": cfg.active_param_count(),

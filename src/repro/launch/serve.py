@@ -47,8 +47,9 @@ def main() -> None:
         print(f"[serve] ADSALA tuner loaded from {args.artifact}")
 
     cache_len = args.prompt_len + args.gen_tokens
-    pctx = make_ctx(None, "prefill", cache_len=cache_len, remat=False)
-    dctx = make_ctx(None, "decode", cache_len=cache_len)
+    pctx = make_ctx(None, "prefill", cache_len=cache_len, remat=False,
+                    tuner=tuner)
+    dctx = make_ctx(None, "decode", cache_len=cache_len, tuner=tuner)
 
     rng = jax.random.PRNGKey(1)
     prompts = jax.random.randint(
@@ -64,9 +65,14 @@ def main() -> None:
     decode = jax.jit(lambda p, tok, c, pos: model.decode_step(
         p, tok, c, pos, dctx))
 
+    from repro.kernels.recorder import DispatchRecorder
+
     t0 = time.perf_counter()
-    logits, cache = prefill(params, prompts)
-    logits.block_until_ready()
+    # the recorder observes the trace-time dispatches of both steps:
+    # which routine every contraction was tagged as, per call site
+    with DispatchRecorder() as rec:
+        logits, cache = prefill(params, prompts)
+        logits.block_until_ready()
     t_prefill = time.perf_counter() - t0
 
     if tuner is not None:
@@ -83,8 +89,9 @@ def main() -> None:
     generated = [toks]
     t0 = time.perf_counter()
     for i in range(args.gen_tokens - 1):
-        logits, cache = decode(params, toks,
-                               cache, jnp.int32(args.prompt_len + i))
+        with rec:                   # decode dispatches trace on step 0
+            logits, cache = decode(params, toks,
+                                   cache, jnp.int32(args.prompt_len + i))
         toks = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         generated.append(toks)
     jax.block_until_ready(generated[-1])
@@ -96,6 +103,11 @@ def main() -> None:
           f"prefill {args.prompt_len} toks in {t_prefill*1e3:.1f}ms, "
           f"decoded {args.gen_tokens} toks at {tps:.1f} tok/s")
     print(f"[serve] sample continuation ids: {out[0, :8].tolist()}")
+    mix = rec.routine_mix(by="events")
+    if mix:
+        pretty = " ".join(f"{r}={f:.2f}" for r, f in mix.items())
+        print(f"[serve] dispatch routine mix (by events): {pretty} "
+              f"over {len(rec.events)} traced events")
     if tuner is not None:
         print(f"[serve] tuner stats: {tuner.stats}")
 

@@ -14,6 +14,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
 from repro.models import layers as L
 from repro.models.config import ArchConfig
 from repro.models.params import ParamDef, init_params, param_specs
@@ -48,9 +49,15 @@ def _dec_layer_defs(cfg: ArchConfig) -> dict:
 
 
 def _cross_attention(p: dict, x: jax.Array, enc_k: jax.Array,
-                     enc_v: jax.Array, s: L.AttnSpec) -> jax.Array:
+                     enc_v: jax.Array, s: L.AttnSpec,
+                     tuner=None) -> jax.Array:
     """Query from x, K/V precomputed from encoder output."""
     b, sq, _ = x.shape
+    # cross-attention scores are rectangular (decoder x encoder): a
+    # plain GEMM, never SYRK-eligible — tagged so the recorded mix
+    # distinguishes it from causal self-attention
+    ops.observe(sq, s.head_dim, enc_k.shape[1], tuner,
+                site="attn.cross_qk", count=b * s.n_heads)
     q = L.linear(x, p["wq"]).reshape(b, sq, s.n_heads, s.head_dim)
     scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
                         enc_k.astype(jnp.float32)) * (s.head_dim ** -0.5)
@@ -91,17 +98,19 @@ class EncDecLM:
         return param_specs(self.defs, rules)
 
     # -- encoder -----------------------------------------------------------
-    def encode(self, params: dict, audio_emb: jax.Array) -> jax.Array:
+    def encode(self, params: dict, audio_emb: jax.Array,
+               tuner=None) -> jax.Array:
         cfg = self.cfg
         x = audio_emb + params["pos_enc"][None, : audio_emb.shape[1]]
         spec = _attn_spec(cfg, causal=False)
         for p in params["encoder"]:
             h, _ = L.attention_train(
-                p["attn"], L.apply_norm(p["ln1"], x, cfg.norm_kind), spec)
+                p["attn"], L.apply_norm(p["ln1"], x, cfg.norm_kind), spec,
+                tuner=tuner)
             x = x + h
             x = x + L.apply_mlp(
                 p["mlp"], L.apply_norm(p["ln2"], x, cfg.norm_kind),
-                cfg.mlp_kind)
+                cfg.mlp_kind, tuner=tuner)
         return L.apply_norm(params["ln_enc"], x, cfg.norm_kind)
 
     # -- decoder full-sequence ----------------------------------------------
@@ -117,15 +126,15 @@ class EncDecLM:
         for p in params["decoder"]:
             h, kv = L.attention_train(
                 p["self_attn"], L.apply_norm(p["ln1"], x, cfg.norm_kind),
-                sa)
+                sa, tuner=ctx.tuner)
             x = x + h
             ek, ev = _project_enc_kv(p["cross_attn"], enc, ca)
             x = x + _cross_attention(
                 p["cross_attn"], L.apply_norm(p["ln_x"], x, cfg.norm_kind),
-                ek, ev, ca)
+                ek, ev, ca, tuner=ctx.tuner)
             x = x + L.apply_mlp(
                 p["mlp"], L.apply_norm(p["ln2"], x, cfg.norm_kind),
-                cfg.mlp_kind)
+                cfg.mlp_kind, tuner=ctx.tuner)
             if want_cache:
                 caches.append({
                     "self": L.seed_kv_cache(kv[0], kv[1], ctx.cache_len,
@@ -137,13 +146,13 @@ class EncDecLM:
     def loss(self, params: dict, batch: dict, ctx: Ctx | None = None
              ) -> jax.Array:
         ctx = ctx or Ctx(mode="train")
-        enc = self.encode(params, batch["audio_emb"])
+        enc = self.encode(params, batch["audio_emb"], tuner=ctx.tuner)
         x, _ = self._decode_seq(params, batch["tokens"], enc, ctx)
         return chunked_cross_entropy(x, params["embed"].T, batch["labels"])
 
     def prefill(self, params: dict, batch: dict, ctx: Ctx
                 ) -> tuple[jax.Array, list]:
-        enc = self.encode(params, batch["audio_emb"])
+        enc = self.encode(params, batch["audio_emb"], tuner=ctx.tuner)
         x, caches = self._decode_seq(params, batch["tokens"], enc, ctx)
         logits = jnp.einsum("bd,dv->bv", x[:, -1], params["embed"].T)
         return logits, caches
@@ -171,14 +180,14 @@ class EncDecLM:
         for p, c in zip(params["decoder"], cache):
             h, self_c = L.attention_decode(
                 p["self_attn"], L.apply_norm(p["ln1"], x, cfg.norm_kind),
-                sa, c["self"], pos)
+                sa, c["self"], pos, tuner=ctx.tuner)
             x = x + h
             x = x + _cross_attention(
                 p["cross_attn"], L.apply_norm(p["ln_x"], x, cfg.norm_kind),
-                c["cross_k"], c["cross_v"], ca)
+                c["cross_k"], c["cross_v"], ca, tuner=ctx.tuner)
             x = x + L.apply_mlp(
                 p["mlp"], L.apply_norm(p["ln2"], x, cfg.norm_kind),
-                cfg.mlp_kind)
+                cfg.mlp_kind, tuner=ctx.tuner)
             new_cache.append({"self": self_c, "cross_k": c["cross_k"],
                               "cross_v": c["cross_v"]})
         x = L.apply_norm(params["ln_f"], x, cfg.norm_kind)

@@ -23,6 +23,7 @@ __all__ = [
     "linear", "mlp_defs", "apply_mlp",
     "rope_angles", "apply_rope",
     "attention_defs", "attention_train", "attention_decode",
+    "SYRK_SCORES_MAX_SEQ",
     "AttnSpec", "KVCache", "init_kv_cache", "seed_kv_cache",
 ]
 
@@ -79,7 +80,14 @@ def mlp_defs(d: int, ff: int, kind: str) -> dict:
             "wo": ParamDef((ff, d), ("ff", "embed"))}
 
 
-def apply_mlp(p: dict, x: jax.Array, kind: str) -> jax.Array:
+def apply_mlp(p: dict, x: jax.Array, kind: str, tuner=None) -> jax.Array:
+    m = 1
+    for dim in x.shape[:-1]:
+        m *= dim
+    d, ff = p["wi"].shape[-2], p["wi"].shape[-1]
+    n_in = 2 * ff if kind in ("swiglu", "geglu") else ff
+    ops.observe(m, d, n_in, tuner, site="mlp.in_proj")
+    ops.observe(m, ff, d, tuner, site="mlp.out_proj")
     if kind == "swiglu":
         return linear(jax.nn.silu(linear(x, p["wg"])) * linear(x, p["wi"]),
                       p["wo"])
@@ -137,6 +145,15 @@ class AttnSpec:
     causal: bool = True
 
 
+#: longest self-attention the SYRK score path will materialise in full.
+#: The chunked XLA path materialises a (B, H, min(512, Sq), Skv) score
+#: block per scan step; at Sq <= this bound the full (Sq, Sq) triangle
+#: is no bigger, so lowering QK^T through ops.syrk costs no extra
+#: memory.  Longer sequences keep the chunked path and record the SYRK
+#: identity as a dispatch hint instead.
+SYRK_SCORES_MAX_SEQ = 512
+
+
 def attention_defs(s: AttnSpec) -> dict:
     d, h, hk, hd = s.d_model, s.n_heads, s.n_kv_heads, s.head_dim
     defs = {"wq": ParamDef((d, h * hd), ("embed", "heads")),
@@ -149,9 +166,15 @@ def attention_defs(s: AttnSpec) -> dict:
     return defs
 
 
-def _project_qkv(p: dict, x: jax.Array, s: AttnSpec, positions: jax.Array
-                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    b, sq, _ = x.shape
+def _project_qkv(p: dict, x: jax.Array, s: AttnSpec, positions: jax.Array,
+                 tuner=None) -> tuple[jax.Array, jax.Array, jax.Array]:
+    b, sq, d = x.shape
+    # the q/k/v projections are plain GEMMs; tag them so the recorded
+    # routine mix carries the dense dispatch volume, not just the
+    # SYRK/TRSM-eligible sites
+    ops.observe(b * sq, d,
+                (s.n_heads + 2 * s.n_kv_heads) * s.head_dim, tuner,
+                site="attn.qkv_proj")
     q = linear(x, p["wq"]).reshape(b, sq, s.n_heads, s.head_dim)
     k = linear(x, p["wk"]).reshape(b, sq, s.n_kv_heads, s.head_dim)
     v = linear(x, p["wv"]).reshape(b, sq, s.n_kv_heads, s.head_dim)
@@ -215,30 +238,83 @@ def chunked_attention_xla(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out[:, :, :sq]
 
 
-def attention_train(p: dict, x: jax.Array, s: AttnSpec
+def _attention_scores_syrk(q: jax.Array, k: jax.Array, v: jax.Array,
+                           s: AttnSpec, tuner) -> jax.Array:
+    """Unwindowed causal self-attention through the SYRK score path.
+
+    With causal masking only the lower triangle of QK^T is ever
+    consumed — exactly SYRK's output shape — so the score product
+    dispatches (and is recorded) as routine="syrk" on the (Sq, Dh, Sq)
+    triple instead of being mispriced as a full GEMM.  q/k/v are
+    (B*H, Sq, Dh); computed in fp32 like the chunked path.  Windowed
+    layers never reach here (their band is a subset of the triangle —
+    SYRK pricing would overstate them).
+    """
+    bh, sq = q.shape[0], q.shape[1]
+    scale = s.head_dim ** -0.5
+    scores = jax.vmap(
+        lambda qi, ki: ops.syrk(qi, ki, tuner=tuner, site="attn.qk",
+                                count=bh))(
+        q.astype(jnp.float32), k.astype(jnp.float32))
+    ids = jnp.arange(sq)
+    mask = ids[None, :] <= ids[:, None]
+    scores = jnp.where(mask[None], scores * scale, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", probs, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def attention_train(p: dict, x: jax.Array, s: AttnSpec, tuner=None
                     ) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
     """Full-sequence self-attention (training / prefill internals).
 
     Returns (out, (k, v)) — the pre-repeat (B, S, Hkv, Dh) projections so
     prefill can seed the decode cache without recomputation.
+
+    Routine identity: unwindowed causal self-attention scores are
+    SYRK-shaped (the causal mask consumes only the lower triangle of
+    the square QK^T).  On the XLA backend at Sq <= SYRK_SCORES_MAX_SEQ
+    they actually lower through :func:`ops.syrk`; otherwise (flash
+    kernel / long sequences) the identity is recorded via
+    :func:`ops.observe` so the tuner is asked the right question either
+    way.  Sliding-window and non-causal scores stay gemm-tagged.
     """
     b, sq, _ = x.shape
     positions = jnp.arange(sq)
-    q, k, v = _project_qkv(p, x, s, positions)
+    q, k, v = _project_qkv(p, x, s, positions, tuner)
     kr = _repeat_kv(k, s.n_heads)
     vr = _repeat_kv(v, s.n_heads)
-    if ops.resolve_backend() == "pallas":
-        qf = q.transpose(0, 2, 1, 3).reshape(b * s.n_heads, sq, s.head_dim)
-        kf = kr.transpose(0, 2, 1, 3).reshape(b * s.n_heads, sq, s.head_dim)
-        vf = vr.transpose(0, 2, 1, 3).reshape(b * s.n_heads, sq, s.head_dim)
-        out = ops.flash_attention(qf, kf, vf, causal=s.causal,
-                                  window=s.window)
+    backend = ops.resolve_backend()
+    # sliding-window scores consume only a thin band, not the full
+    # lower triangle — pricing them as SYRK would overstate their flop
+    # share by ~sq/(2*window), so only unwindowed causal qualifies
+    use_syrk = (backend == "xla" and s.causal and s.window is None
+                and sq <= SYRK_SCORES_MAX_SEQ)
+    qt = q.transpose(0, 2, 1, 3)           # (B, H, S, Dh)
+    kt = kr.transpose(0, 2, 1, 3)
+    vt = vr.transpose(0, 2, 1, 3)
+    if use_syrk:
+        flat = (b * s.n_heads, sq, s.head_dim)
+        out = _attention_scores_syrk(qt.reshape(flat), kt.reshape(flat),
+                                     vt.reshape(flat), s, tuner)
         out = out.reshape(b, s.n_heads, sq, s.head_dim).transpose(0, 2, 1, 3)
     else:
-        out = chunked_attention_xla(
-            q.transpose(0, 2, 1, 3), kr.transpose(0, 2, 1, 3),
-            vr.transpose(0, 2, 1, 3), causal=s.causal, window=s.window,
-            chunk=min(512, sq)).transpose(0, 2, 1, 3)
+        rt = "syrk" if s.causal and s.window is None else "gemm"
+        ops.observe(sq, s.head_dim, sq, tuner, routine=rt,
+                    site="attn.qk", count=b * s.n_heads)
+        if backend == "pallas":
+            flat = (b * s.n_heads, sq, s.head_dim)
+            out = ops.flash_attention(qt.reshape(flat), kt.reshape(flat),
+                                      vt.reshape(flat), causal=s.causal,
+                                      window=s.window)
+            out = out.reshape(b, s.n_heads, sq,
+                              s.head_dim).transpose(0, 2, 1, 3)
+        else:
+            out = chunked_attention_xla(
+                qt, kt, vt, causal=s.causal, window=s.window,
+                chunk=min(512, sq)).transpose(0, 2, 1, 3)
+    ops.observe(b * sq, s.n_heads * s.head_dim, x.shape[-1], tuner,
+                site="attn.out_proj")
     out = linear(out.reshape(b, sq, s.n_heads * s.head_dim), p["wo"])
     return out, (k, v)
 
@@ -330,11 +406,22 @@ def _dequantize_kv(q: jax.Array, scale: jax.Array,
 
 
 def attention_decode(p: dict, x: jax.Array, s: AttnSpec, cache: KVCache,
-                     pos: jax.Array) -> tuple[jax.Array, KVCache]:
-    """One-token decode: x (B, 1, D); pos scalar int32 (tokens so far)."""
+                     pos: jax.Array, tuner=None
+                     ) -> tuple[jax.Array, KVCache]:
+    """One-token decode: x (B, 1, D); pos scalar int32 (tokens so far).
+
+    The cache update is TRSM-adjacent: each step appends one row and
+    reads the triangular valid prefix, a sequential dependency along
+    the cache axis exactly like TRSM's M-panel substitution — so the
+    (cap, Dh, B*H) contraction is tagged routine="trsm" (degrading to
+    gemm on artifacts without trsm signal) rather than priced as a
+    parallel GEMM.
+    """
     b = x.shape[0]
-    q, k_new, v_new = _project_qkv(p, x, s, pos[None])
+    q, k_new, v_new = _project_qkv(p, x, s, pos[None], tuner)
     cap = cache.k.shape[1]
+    ops.observe(cap, s.head_dim, b * s.n_heads, tuner,
+                routine="trsm", site="attn.cache_update")
     slot = pos % cap if cache.windowed else jnp.minimum(pos, cap - 1)
     if cache.quantized:
         kq, ks = _quantize_kv(k_new)
@@ -366,4 +453,6 @@ def attention_decode(p: dict, x: jax.Array, s: AttnSpec, cache: KVCache,
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhk,bkhd->bhd", probs, vv.astype(jnp.float32))
     out = out.reshape(b, 1, s.n_heads * s.head_dim).astype(x.dtype)
+    ops.observe(b, s.n_heads * s.head_dim, x.shape[-1], tuner,
+                site="attn.out_proj")
     return linear(out, p["wo"]), new_cache

@@ -15,6 +15,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
 from repro.models.layers import (
     chunked_attention_xla,
     linear,
@@ -79,10 +80,17 @@ def _rope_1head(x: jax.Array, positions: jax.Array) -> jax.Array:
     return out.astype(x.dtype)
 
 
-def _latents(p: dict, x: jax.Array, s: MLASpec, positions: jax.Array
-             ) -> tuple[jax.Array, jax.Array, jax.Array]:
+def _latents(p: dict, x: jax.Array, s: MLASpec, positions: jax.Array,
+             tuner=None) -> tuple[jax.Array, jax.Array, jax.Array]:
     """q (B,S,H,qk_head_dim), c_kv (B,S,R_kv), k_rope (B,S,R_rope)."""
     b, sq, _ = x.shape
+    # latent down-projections (d -> lora rank) are the skinny GEMMs MLA
+    # trades cache memory for; tag them so the tuner prices that shape
+    ops.observe(b * sq, s.d_model,
+                s.q_lora_rank + s.kv_lora_rank + s.qk_rope_dim, tuner,
+                site="mla.down_proj")
+    ops.observe(b * sq, s.q_lora_rank, s.n_heads * s.qk_head_dim,
+                tuner, site="mla.up_proj_q")
     q_lat = rmsnorm(linear(x, p["wq_a"]), p["q_norm"])
     q = linear(q_lat, p["wq_b"]).reshape(b, sq, s.n_heads, s.qk_head_dim)
     q_nope, q_rope = q[..., : s.qk_nope_dim], q[..., s.qk_nope_dim:]
@@ -93,10 +101,14 @@ def _latents(p: dict, x: jax.Array, s: MLASpec, positions: jax.Array
     return q, c_kv, k_rope
 
 
-def _expand_kv(p: dict, c_kv: jax.Array, k_rope: jax.Array, s: MLASpec
-               ) -> tuple[jax.Array, jax.Array]:
+def _expand_kv(p: dict, c_kv: jax.Array, k_rope: jax.Array, s: MLASpec,
+               tuner=None) -> tuple[jax.Array, jax.Array]:
     """Decompress latents to per-head K (nope+rope) and V."""
     b, sk, _ = c_kv.shape
+    # latent up-projection (kv lora rank -> per-head K/V)
+    ops.observe(b * sk, s.kv_lora_rank,
+                s.n_heads * (s.qk_nope_dim + s.v_head_dim), tuner,
+                site="mla.up_proj_kv")
     k_nope = linear(c_kv, p["wk_b"]).reshape(b, sk, s.n_heads, s.qk_nope_dim)
     v = linear(c_kv, p["wv_b"]).reshape(b, sk, s.n_heads, s.v_head_dim)
     k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
@@ -105,13 +117,16 @@ def _expand_kv(p: dict, c_kv: jax.Array, k_rope: jax.Array, s: MLASpec
     return k, v
 
 
-def mla_train(p: dict, x: jax.Array, s: MLASpec
+def mla_train(p: dict, x: jax.Array, s: MLASpec, tuner=None
               ) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
     """Returns (out, (c_kv, k_rope)) — the latents seed the decode cache."""
     b, sq, _ = x.shape
     positions = jnp.arange(sq)
-    q, c_kv, k_rope = _latents(p, x, s, positions)
-    k, v = _expand_kv(p, c_kv, k_rope, s)
+    q, c_kv, k_rope = _latents(p, x, s, positions, tuner)
+    k, v = _expand_kv(p, c_kv, k_rope, s, tuner)
+    # causal scores: SYRK-shaped like GQA attention (triangular output)
+    ops.observe(sq, s.qk_head_dim, sq, tuner, routine="syrk",
+                site="mla.qk", count=b * s.n_heads)
     out = chunked_attention_xla(
         q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
         v.transpose(0, 2, 1, 3), causal=True, window=None,
@@ -150,7 +165,7 @@ def init_mla_cache(batch: int, capacity: int, s: MLASpec,
 
 
 def mla_decode(p: dict, x: jax.Array, s: MLASpec, cache: MLACache,
-               pos: jax.Array) -> tuple[jax.Array, MLACache]:
+               pos: jax.Array, tuner=None) -> tuple[jax.Array, MLACache]:
     """One-token decode against the latent cache.
 
     Absorbed-projection trick: scores are computed in latent space
@@ -158,7 +173,11 @@ def mla_decode(p: dict, x: jax.Array, s: MLASpec, cache: MLACache,
     to per-head K/V — the FLOP/memory saving MLA decode is built for.
     """
     b = x.shape[0]
-    q, c_kv_new, k_rope_new = _latents(p, x, s, pos[None])
+    q, c_kv_new, k_rope_new = _latents(p, x, s, pos[None], tuner)
+    # latent cache update: sequential append + triangular-prefix read,
+    # TRSM-adjacent exactly like the GQA KV cache update
+    ops.observe(cache.c_kv.shape[1], s.kv_lora_rank, b * s.n_heads,
+                tuner, routine="trsm", site="mla.cache_update")
     cache = MLACache(
         jax.lax.dynamic_update_slice(cache.c_kv, c_kv_new, (0, pos, 0)),
         jax.lax.dynamic_update_slice(cache.k_rope, k_rope_new, (0, pos, 0)))

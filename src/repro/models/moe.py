@@ -79,7 +79,12 @@ def _route(p: dict, xf: jax.Array, s: MoESpec
     return gate_vals, gate_idx, aux
 
 
-def _shared_ffn(p: dict, xf: jax.Array) -> jax.Array:
+def _shared_ffn(p: dict, xf: jax.Array, tuner=None) -> jax.Array:
+    ops.observe(xf.shape[0], xf.shape[1],
+                2 * p["shared_wi"].shape[-1], tuner,
+                site="moe.shared_in")
+    ops.observe(xf.shape[0], p["shared_wo"].shape[-2],
+                p["shared_wo"].shape[-1], tuner, site="moe.shared_out")
     sh = jax.nn.silu(linear(xf, p["shared_wg"])) * linear(xf, p["shared_wi"])
     return linear(sh, p["shared_wo"])
 
@@ -88,7 +93,7 @@ def _shared_ffn(p: dict, xf: jax.Array) -> jax.Array:
 # Path 1: dense one-hot dispatch (small configs, pure jit)
 # ---------------------------------------------------------------------------
 
-def apply_moe(p: dict, x: jax.Array, s: MoESpec
+def apply_moe(p: dict, x: jax.Array, s: MoESpec, tuner=None
               ) -> tuple[jax.Array, jax.Array]:
     """x: (B, S, D) -> (out, aux_loss).  One-hot einsum dispatch."""
     b, sl, d = x.shape
@@ -107,14 +112,15 @@ def apply_moe(p: dict, x: jax.Array, s: MoESpec
     disp_c = jax.nn.one_hot(jnp.where(keep, pos, cap), cap, dtype=x.dtype)
     buckets = jnp.einsum("td,tke,tkc->ecd", xf, disp_e, disp_c)
 
-    hi = ops.grouped_matmul(buckets, p["wi"])
-    hg = ops.grouped_matmul(buckets, p["wg"])
-    y = ops.grouped_matmul(jax.nn.silu(hg) * hi, p["wo"])
+    hi = ops.grouped_matmul(buckets, p["wi"], tuner=tuner, site="moe.wi")
+    hg = ops.grouped_matmul(buckets, p["wg"], tuner=tuner, site="moe.wg")
+    y = ops.grouped_matmul(jax.nn.silu(hg) * hi, p["wo"], tuner=tuner,
+                           site="moe.wo")
 
     combine = disp_e * (gate_vals * keep).astype(x.dtype)[..., None]
     out = jnp.einsum("ecd,tke,tkc->td", y, combine, disp_c)
     if s.n_shared:
-        out = out + _shared_ffn(p, xf)
+        out = out + _shared_ffn(p, xf, tuner)
     return out.reshape(b, sl, d), aux
 
 
@@ -159,7 +165,7 @@ def _combine(y: jax.Array, dest: jax.Array, order: jax.Array,
     return jnp.einsum("tkd,tk->td", per_choice, w)
 
 
-def apply_moe_ep(p: dict, x: jax.Array, s: MoESpec
+def apply_moe_ep(p: dict, x: jax.Array, s: MoESpec, tuner=None
                  ) -> tuple[jax.Array, jax.Array]:
     """Expert-parallel MoE (n_experts divisible by the ep axis).
 
@@ -182,19 +188,20 @@ def apply_moe_ep(p: dict, x: jax.Array, s: MoESpec
     # (E, C, D) -> (E/ep, ep*C, D): rows for my local experts from all peers
     buckets = jax.lax.all_to_all(buckets, s.ep_axis, split_axis=0,
                                  concat_axis=1, tiled=True)
-    hi = ops.grouped_matmul(buckets, p["wi"])
-    hg = ops.grouped_matmul(buckets, p["wg"])
-    y = ops.grouped_matmul(jax.nn.silu(hg) * hi, p["wo"])
+    hi = ops.grouped_matmul(buckets, p["wi"], tuner=tuner, site="moe.wi")
+    hg = ops.grouped_matmul(buckets, p["wg"], tuner=tuner, site="moe.wg")
+    y = ops.grouped_matmul(jax.nn.silu(hg) * hi, p["wo"], tuner=tuner,
+                           site="moe.wo")
     y = jax.lax.all_to_all(y, s.ep_axis, split_axis=1, concat_axis=0,
                            tiled=True)                     # (E, C, D)
 
     out = _combine(y, dest, order, valid, gate_vals, n_tok, s)
     if s.n_shared:
-        out = out + _shared_ffn(p, xf)
+        out = out + _shared_ffn(p, xf, tuner)
     return out.reshape(b, sl, d), aux
 
 
-def apply_moe_tp(p: dict, x: jax.Array, s: MoESpec
+def apply_moe_tp(p: dict, x: jax.Array, s: MoESpec, tuner=None
                  ) -> tuple[jax.Array, jax.Array]:
     """Expert-TP MoE for small expert counts (mixtral: 8 experts on a
     16-way model axis).  MUST run inside shard_map with ``x`` replicated
@@ -213,12 +220,14 @@ def apply_moe_tp(p: dict, x: jax.Array, s: MoESpec
     aux = jax.lax.pmean(aux, s.ep_axis)
 
     buckets, dest, order, valid = _dispatch(xf, gate_idx, s, cap)
-    hi = ops.grouped_matmul(buckets, p["wi"])      # (E, C, F/tp)
-    hg = ops.grouped_matmul(buckets, p["wg"])
-    y = ops.grouped_matmul(jax.nn.silu(hg) * hi, p["wo"])  # partial sums
+    hi = ops.grouped_matmul(buckets, p["wi"], tuner=tuner,
+                            site="moe.wi")         # (E, C, F/tp)
+    hg = ops.grouped_matmul(buckets, p["wg"], tuner=tuner, site="moe.wg")
+    y = ops.grouped_matmul(jax.nn.silu(hg) * hi, p["wo"], tuner=tuner,
+                           site="moe.wo")          # partial sums
     y = jax.lax.psum(y, s.ep_axis)
 
     out = _combine(y, dest, order, valid, gate_vals, n_tok, s)
     if s.n_shared:
-        out = out + _shared_ffn(p, xf)
+        out = out + _shared_ffn(p, xf, tuner)
     return out.reshape(b, sl, d), aux

@@ -159,6 +159,10 @@ class Ctx:
     remat: bool = True
     kv_quantized: bool = False     # int8 KV cache (§Perf, memory-bound
                                    # decode cells)
+    tuner: Any = None              # AdsalaTuner threaded to every
+                                   # routine-aware call site (None = the
+                                   # sites still report dispatch events,
+                                   # just untuned)
 
 
 def _moe_apply(p: dict, x: jax.Array, cfg: ArchConfig, ctx: Ctx
@@ -172,7 +176,7 @@ def _moe_apply(p: dict, x: jax.Array, cfg: ArchConfig, ctx: Ctx
     """
     spec = _moe_spec(cfg)
     if ctx.mesh is None or ctx.mode == "decode":
-        return MOE.apply_moe(p, x, spec)
+        return MOE.apply_moe(p, x, spec, tuner=ctx.tuner)
     from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
     dp = ctx.dp_axes
@@ -184,7 +188,7 @@ def _moe_apply(p: dict, x: jax.Array, cfg: ArchConfig, ctx: Ctx
     fn = MOE.apply_moe_ep if ep_mode else MOE.apply_moe_tp
 
     def wrapped(p_local, x_local):
-        out, aux = fn(p_local, x_local, s=spec)
+        out, aux = fn(p_local, x_local, s=spec, tuner=ctx.tuner)
         return out, jax.lax.pmean(aux, (*dp, tp))
 
     if ep_mode:
@@ -236,10 +240,12 @@ def _apply_layer_train(p: dict, x: jax.Array, cfg: ArchConfig,
     h = L.apply_norm(p["ln1"], x, cfg.norm_kind)
     if spec.kind in ("attn", "local"):
         if cfg.attn_kind == "mla":
-            mix, raw = MLA.mla_train(p["mixer"], h, _mla_spec(cfg))
+            mix, raw = MLA.mla_train(p["mixer"], h, _mla_spec(cfg),
+                                     tuner=ctx.tuner)
         else:
             mix, raw = L.attention_train(p["mixer"], h,
-                                         _attn_spec(cfg, spec.kind))
+                                         _attn_spec(cfg, spec.kind),
+                                         tuner=ctx.tuner)
     elif spec.kind == "rglru":
         mix, raw = REC.rglru_block_train(p["mixer"], h)
     elif spec.kind == "mlstm":
@@ -252,7 +258,7 @@ def _apply_layer_train(p: dict, x: jax.Array, cfg: ArchConfig,
     if spec.mlp == "mlp":
         x = x + L.apply_mlp(p["mlp"],
                             L.apply_norm(p["ln2"], x, cfg.norm_kind),
-                            cfg.mlp_kind)
+                            cfg.mlp_kind, tuner=ctx.tuner)
     elif spec.mlp == "moe":
         out, aux = _moe_apply(p["moe"],
                               L.apply_norm(p["ln2"], x, cfg.norm_kind),
@@ -289,10 +295,11 @@ def _apply_layer_decode(p: dict, x: jax.Array, cache: Any,
     if spec.kind in ("attn", "local"):
         if cfg.attn_kind == "mla":
             mix, cache = MLA.mla_decode(p["mixer"], h, _mla_spec(cfg),
-                                        cache, pos)
+                                        cache, pos, tuner=ctx.tuner)
         else:
             mix, cache = L.attention_decode(
-                p["mixer"], h, _attn_spec(cfg, spec.kind), cache, pos)
+                p["mixer"], h, _attn_spec(cfg, spec.kind), cache, pos,
+                tuner=ctx.tuner)
     elif spec.kind == "rglru":
         mix, cache = REC.rglru_block_decode(p["mixer"], h, cache)
     elif spec.kind == "mlstm":
@@ -303,7 +310,7 @@ def _apply_layer_decode(p: dict, x: jax.Array, cache: Any,
     if spec.mlp == "mlp":
         x = x + L.apply_mlp(p["mlp"],
                             L.apply_norm(p["ln2"], x, cfg.norm_kind),
-                            cfg.mlp_kind)
+                            cfg.mlp_kind, tuner=ctx.tuner)
     elif spec.mlp == "moe":
         out, _ = _moe_apply(p["moe"],
                             L.apply_norm(p["ln2"], x, cfg.norm_kind),

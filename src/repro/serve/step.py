@@ -78,9 +78,17 @@ def decode_inputs_sds(model, cfg: ArchConfig, shape: ShapeSpec,
     return token, cache, pos
 
 
-def build_prefill(model, cfg: ArchConfig, shape: ShapeSpec, mesh):
-    """Returns (prefill_fn, param_specs, batch_specs, out description)."""
-    ctx = make_ctx(mesh, "prefill", cache_len=shape.seq_len, remat=False)
+def build_prefill(model, cfg: ArchConfig, shape: ShapeSpec, mesh,
+                  tuner=None):
+    """Returns (prefill_fn, param_specs, batch_specs, out description).
+
+    ``tuner`` reaches every routine-aware call site through the Ctx, so
+    a DispatchRecorder around the built function (or its jit trace)
+    observes the prefill's routine mix — causal self-attention scores
+    dispatch as SYRK, projections/MoE as GEMM.
+    """
+    ctx = make_ctx(mesh, "prefill", cache_len=shape.seq_len, remat=False,
+                   tuner=tuner)
 
     if cfg.family == "audio":
         def prefill(params, batch):
@@ -95,9 +103,15 @@ def build_prefill(model, cfg: ArchConfig, shape: ShapeSpec, mesh):
             batch_specs(cfg, shape, mesh))
 
 
-def build_decode(model, cfg: ArchConfig, shape: ShapeSpec, mesh):
-    """Returns (decode_fn, param_specs, (token, cache, pos) specs)."""
-    ctx = make_ctx(mesh, "decode", cache_len=shape.seq_len)
+def build_decode(model, cfg: ArchConfig, shape: ShapeSpec, mesh,
+                 tuner=None):
+    """Returns (decode_fn, param_specs, (token, cache, pos) specs).
+
+    ``tuner`` reaches the decode call sites through the Ctx; the
+    per-layer KV/latent cache updates dispatch as TRSM-adjacent events
+    (sequential along the cache axis), observable by a recorder.
+    """
+    ctx = make_ctx(mesh, "decode", cache_len=shape.seq_len, tuner=tuner)
 
     def decode(params, token, cache, pos):
         return model.decode_step(params, token, cache, pos, ctx)

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.dist.sharding import batch_specs, partition_params, state_specs
+from repro.kernels import recorder
 from repro.models.config import ArchConfig, ShapeSpec
 from repro.models.transformer import Ctx
 from repro.train.optim import (
@@ -30,16 +31,17 @@ __all__ = ["build_train_step", "make_ctx", "abstract_state",
 
 
 def make_ctx(mesh, mode: str, *, cache_len: int = 0,
-             remat: bool = True) -> Ctx:
+             remat: bool = True, tuner=None) -> Ctx:
     # §Perf knob: ADSALA_KV_INT8=1 switches serving caches to int8
     kv_q = (os.environ.get("ADSALA_KV_INT8") == "1"
             and mode in ("prefill", "decode"))
     if mesh is None:
         return Ctx(mode=mode, cache_len=cache_len, remat=remat,
-                   kv_quantized=kv_q)
+                   kv_quantized=kv_q, tuner=tuner)
     dp = tuple(a for a in mesh.axis_names if a != "model")
     return Ctx(mode=mode, mesh=mesh, dp_axes=dp, tp_axis="model",
-               cache_len=cache_len, remat=remat, kv_quantized=kv_q)
+               cache_len=cache_len, remat=remat, kv_quantized=kv_q,
+               tuner=tuner)
 
 
 def abstract_state(model, cfg: ArchConfig, opt_cfg: AdamWConfig,
@@ -71,16 +73,25 @@ def train_batch_sds(cfg: ArchConfig, shape: ShapeSpec,
 
 
 def build_train_step(model, cfg: ArchConfig, shape: ShapeSpec, mesh,
-                     opt_cfg: AdamWConfig | None = None):
-    """Returns (train_step, state_spec_tree, batch_spec_tree)."""
+                     opt_cfg: AdamWConfig | None = None, tuner=None):
+    """Returns (train_step, state_spec_tree, batch_spec_tree).
+
+    ``tuner`` is threaded to every routine-aware call site via the Ctx;
+    the step also tags the backward-pass contractions: for each forward
+    event the recorder collected while the loss traced, the two
+    AD-transposed gemm shapes (dX, dW) are recorded, so a recorded
+    train step shows forward *and* backward dispatch volume.
+    """
     opt_cfg = opt_cfg or AdamWConfig()
-    ctx = make_ctx(mesh, "train")
+    ctx = make_ctx(mesh, "train", tuner=tuner)
 
     def loss_fn(params, batch):
         return model.loss(params, batch, ctx)
 
     def train_step(state, batch):
+        n0 = recorder.active_event_count()
         loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch)
+        recorder.record_backward(since=n0, tuner=tuner)
         new_state, metrics = adamw_update(state, grads, opt_cfg)
         metrics["loss"] = loss
         return new_state, metrics

@@ -1,0 +1,422 @@
+"""End-to-end dispatch observability: serve/train steps under a
+DispatchRecorder, routine-tagged call-site parity, legacy-artifact gemm
+fallback, and the recorder's own semantics (nesting, thread isolation,
+zero-overhead-when-inactive)."""
+
+import json
+import shutil
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models.layers as L
+from repro.configs import build_model, get_smoke_config
+from repro.core import AdsalaTuner
+from repro.kernels import ops, recorder
+from repro.kernels.recorder import DispatchRecorder
+from repro.models.config import ShapeSpec
+from repro.models.layers import AttnSpec, attention_decode, attention_train
+from repro.serve.step import build_decode, build_prefill
+from repro.train.step import build_train_step, train_batch_sds
+
+B, S = 2, 16
+
+
+def _shape(kind: str) -> ShapeSpec:
+    return ShapeSpec(f"tiny_{kind}", S, B, kind)
+
+
+def _serve_once(arch: str, tuner, rec: DispatchRecorder) -> None:
+    """One eager prefill + one decode step inside ``rec``."""
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                cfg.vocab)
+    prefill, _, _ = build_prefill(model, cfg, _shape("prefill"), None,
+                                  tuner=tuner)
+    decode, _, _ = build_decode(model, cfg, _shape("decode"), None,
+                                tuner=tuner)
+    with rec:
+        logits, cache = prefill(params, {"tokens": tokens})
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        decode(params, tok, cache, jnp.int32(S - 1))
+
+
+# ---------------------------------------------------------------------------
+# End-to-end serve / train steps (acceptance criteria)
+# ---------------------------------------------------------------------------
+
+def test_serve_step_records_nontrivial_routine_mix(tiny_artifact):
+    """A serve prefill+decode step records >= 2 distinct routines:
+    prefill self-attention dispatches SYRK, the decode cache update
+    dispatches TRSM, everything else GEMM."""
+    tuner = AdsalaTuner.from_artifact(tiny_artifact.dir)
+    rec = DispatchRecorder()
+    _serve_once("stablelm-1.6b", tuner, rec)
+
+    mix = rec.routine_mix()
+    assert len(mix) >= 2, f"trivial routine mix {mix}"
+    assert set(mix) <= {"gemm", "syrk", "trsm"}
+    assert abs(sum(mix.values()) - 1.0) < 1e-9
+    # prefill self-attention went through the SYRK-shaped score path;
+    # the vmapped per-head call carries its batch multiplicity so the
+    # flops-weighted mix doesn't under-count score volume by B*H
+    syrk_events = [e for e in rec.sites("attn.qk") if e.routine == "syrk"]
+    assert syrk_events, "prefill QK^T did not record syrk"
+    assert all(e.m == e.n == S for e in syrk_events)
+    cfg = get_smoke_config("stablelm-1.6b")
+    assert all(e.count == B * cfg.n_heads for e in syrk_events)
+    # decode cache update is TRSM-tagged
+    trsm_events = [e for e in rec.sites("attn.cache_update")]
+    assert trsm_events and all(e.routine == "trsm" for e in trsm_events)
+    # the tuner was actually consulted: events carry chosen configs
+    assert all(e.config is not None for e in rec.events)
+
+
+def test_events_carry_tuner_cache_hits(tiny_artifact):
+    tuner = AdsalaTuner.from_artifact(tiny_artifact.dir)
+    tuner._cache.clear()                       # drop the warm-start set
+    a = jnp.ones((37, 19), jnp.float32)
+    b = jnp.ones((19, 11), jnp.float32)
+    with DispatchRecorder() as rec:
+        ops.matmul(a, b, tuner=tuner)
+        ops.matmul(a, b, tuner=tuner)
+    assert [e.cache_hit for e in rec.events] == [False, True]
+    assert rec.events[0].config == rec.events[1].config
+
+
+def test_moe_records_grouped_gemm_per_expert_shapes(tiny_artifact):
+    tuner = AdsalaTuner.from_artifact(tiny_artifact.dir)
+    cfg = get_smoke_config("mixtral-8x22b")
+    rec = DispatchRecorder()
+    _serve_once("mixtral-8x22b", tuner, rec)
+
+    for site in ("moe.wi", "moe.wg", "moe.wo"):
+        events = rec.sites(site)
+        assert events, f"no events at {site}"
+        assert all(e.routine == "gemm" for e in events)
+        # one event per expert per traced grouped call
+        assert len(events) % cfg.n_experts == 0
+        # per-expert shapes: every expert runs its capacity bucket
+        m0, k0, n0 = events[0].m, events[0].k, events[0].n
+        assert all((e.m, e.k, e.n) == (m0, k0, n0)
+                   for e in events[:cfg.n_experts])
+    # grouped lookups flow through ONE select_many per call: far fewer
+    # evaluations than calls
+    assert tuner.stats["evaluations"] < tuner.stats["calls"]
+
+
+def test_mla_latent_projections_and_cache_update(tiny_artifact):
+    tuner = AdsalaTuner.from_artifact(tiny_artifact.dir)
+    rec = DispatchRecorder()
+    _serve_once("deepseek-v2-236b", tuner, rec)
+
+    assert rec.sites("mla.down_proj") and rec.sites("mla.up_proj_kv")
+    assert all(e.routine == "gemm" for e in rec.sites("mla.down_proj"))
+    cache_events = rec.sites("mla.cache_update")
+    assert cache_events and all(e.routine == "trsm" for e in cache_events)
+    assert {"gemm", "syrk", "trsm"} <= {e.routine for e in rec.events}
+
+
+def test_train_step_tags_backward_contractions(tiny_artifact):
+    tuner = AdsalaTuner.from_artifact(tiny_artifact.dir)
+    cfg = get_smoke_config("stablelm-1.6b")
+    model = build_model(cfg)
+    step, _, _ = build_train_step(model, cfg, _shape("train"), None,
+                                  tuner=tuner)
+    from repro.train.optim import AdamWConfig, init_state
+    state = init_state(model.init(jax.random.PRNGKey(0)), AdamWConfig())
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                cfg.vocab)
+    batch = {"tokens": tokens, "labels": tokens}
+
+    with DispatchRecorder() as rec:
+        _, metrics = step(state, batch)
+    assert jnp.isfinite(metrics["loss"])
+
+    fwd = [e for e in rec.events if not e.site.startswith("bwd")]
+    bwd = [e for e in rec.events if e.site.startswith("bwd")]
+    # two AD-transposed contractions per forward event, all gemm
+    assert len(bwd) == 2 * len(fwd) > 0
+    assert all(e.routine == "gemm" for e in bwd)
+    # bwd events are appended in forward order: dX then dW per event,
+    # with the AD-transposed (m, k, n) triples
+    f0 = fwd[0]
+    assert bwd[0].site == f"bwd.dx[{f0.site}]"
+    assert (bwd[0].m, bwd[0].k, bwd[0].n) == (f0.m, f0.n, f0.k)
+    assert bwd[1].site == f"bwd.dw[{f0.site}]"
+    assert (bwd[1].m, bwd[1].k, bwd[1].n) == (f0.k, f0.m, f0.n)
+
+
+# ---------------------------------------------------------------------------
+# Parity: routine-tagged call sites == pre-existing gemm-path outputs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["pallas", "xla"])
+def test_syrk_qk_matches_gemm_path(backend):
+    """ops.syrk(Q, K) == tril(Q @ K^T) — the gemm path the attention
+    scores used before routine tagging — on both backends."""
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    got = ops.syrk(q, k, backend=backend, interpret=True)
+    want = jnp.tril(q @ k.T)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["pallas", "xla"])
+def test_attention_train_parity_vs_pre_syrk_path(backend, monkeypatch):
+    """attention_train with the SYRK score lowering matches the
+    pre-existing path (chunked XLA / flash) to fp32 tolerance."""
+    monkeypatch.setenv("ADSALA_BACKEND", backend)
+    spec = AttnSpec(d_model=32, n_heads=2, n_kv_heads=2, head_dim=16)
+    rng = jax.random.PRNGKey(0)
+    x = jax.random.normal(rng, (B, 24, 32), jnp.float32)
+    p = {
+        "wq": jax.random.normal(jax.random.PRNGKey(1), (32, 32)) * 0.1,
+        "wk": jax.random.normal(jax.random.PRNGKey(2), (32, 32)) * 0.1,
+        "wv": jax.random.normal(jax.random.PRNGKey(3), (32, 32)) * 0.1,
+        "wo": jax.random.normal(jax.random.PRNGKey(4), (32, 32)) * 0.1,
+    }
+    out_tagged, _ = attention_train(p, x, spec)
+    # force the legacy path by disabling the SYRK lowering
+    monkeypatch.setattr(L, "SYRK_SCORES_MAX_SEQ", 0)
+    out_legacy, _ = attention_train(p, x, spec)
+    np.testing.assert_allclose(np.asarray(out_tagged),
+                               np.asarray(out_legacy),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("backend", ["pallas", "xla"])
+def test_decode_cache_update_parity(backend, tiny_artifact, monkeypatch):
+    """The TRSM-tagged decode cache update is a hint: tuned and untuned
+    decode produce identical outputs on both backends."""
+    monkeypatch.setenv("ADSALA_BACKEND", backend)
+    tuner = AdsalaTuner.from_artifact(tiny_artifact.dir)
+    spec = AttnSpec(d_model=32, n_heads=2, n_kv_heads=2, head_dim=16)
+    cache_shape = (B, 8, 2, 16)
+    cache = L.KVCache(
+        jax.random.normal(jax.random.PRNGKey(5), cache_shape),
+        jax.random.normal(jax.random.PRNGKey(6), cache_shape), False)
+    x = jax.random.normal(jax.random.PRNGKey(7), (B, 1, 32), jnp.float32)
+    p = {
+        "wq": jax.random.normal(jax.random.PRNGKey(1), (32, 32)) * 0.1,
+        "wk": jax.random.normal(jax.random.PRNGKey(2), (32, 32)) * 0.1,
+        "wv": jax.random.normal(jax.random.PRNGKey(3), (32, 32)) * 0.1,
+        "wo": jax.random.normal(jax.random.PRNGKey(4), (32, 32)) * 0.1,
+    }
+    out_plain, _ = attention_decode(p, x, spec, cache, jnp.int32(4))
+    with DispatchRecorder() as rec:
+        out_tuned, _ = attention_decode(p, x, spec, cache, jnp.int32(4),
+                                        tuner=tuner)
+    assert any(e.routine == "trsm" for e in rec.events)
+    np.testing.assert_allclose(np.asarray(out_tuned),
+                               np.asarray(out_plain), atol=0, rtol=0)
+
+
+# ---------------------------------------------------------------------------
+# Legacy (gemm-only) artifact: call sites fall back instead of raising
+# ---------------------------------------------------------------------------
+
+def test_legacy_gemm_only_artifact_falls_back_to_gemm(tiny_artifact,
+                                                      tmp_path):
+    """A v1/gemm-only artifact serving routine-tagged call sites must
+    degrade every syrk/trsm dispatch to gemm (recorder shows gemm),
+    not raise — the call-site side of the tuner's 'refuses uninstalled
+    routines' guard."""
+    legacy = tmp_path / "gemm_only"
+    shutil.copytree(tiny_artifact.dir, legacy)
+    cfg_path = legacy / "config.json"
+    config = json.load(open(cfg_path))
+    config.setdefault("install", {})["routines"] = ["gemm"]
+    config["warm_start"] = None
+    json.dump(config, open(cfg_path, "w"))
+    tuner = AdsalaTuner.from_artifact(str(legacy))
+    assert tuner.routines == ("gemm",)
+    # the tuner itself still refuses direct syrk asks...
+    with pytest.raises(ValueError, match="no training signal"):
+        tuner.select(64, 64, 64, "syrk")
+
+    # ...but the serve step degrades instead of raising
+    rec = DispatchRecorder()
+    _serve_once("stablelm-1.6b", tuner, rec)
+    assert rec.events
+    rec.assert_only(["gemm"])          # every event fell back
+    assert all(e.config is not None for e in rec.events)
+
+
+def test_supported_routine_validates_and_falls_back(tiny_artifact):
+    tuner = AdsalaTuner.from_artifact(tiny_artifact.dir)
+    assert ops.supported_routine("syrk", None) == "syrk"
+    assert ops.supported_routine("syrk", tuner) == "syrk"
+    with pytest.raises(ValueError, match="unknown routine"):
+        ops.supported_routine("cholesky", tuner)
+    with pytest.raises(ValueError, match="unknown routine"):
+        ops.dispatch_hint(8, 8, 8, None, routine="herk")
+    with pytest.raises(ValueError, match="unknown routine"):
+        ops.grouped_dispatch_hint([(8, 8, 8)], None, routine="trmm")
+
+
+# ---------------------------------------------------------------------------
+# Recorder semantics
+# ---------------------------------------------------------------------------
+
+def test_recorder_nesting_outer_aggregates_inner():
+    a = jnp.ones((8, 4), jnp.float32)
+    b = jnp.ones((4, 8), jnp.float32)
+    with DispatchRecorder() as outer:
+        ops.matmul(a, b, site="first")
+        with DispatchRecorder() as inner:
+            ops.matmul(a, b, site="second")
+        ops.matmul(a, b, site="third")
+    assert [e.site for e in inner.events] == ["second"]
+    assert [e.site for e in outer.events] == ["first", "second", "third"]
+
+
+def test_recorder_thread_local_isolation():
+    a = jnp.ones((8, 4), jnp.float32)
+    b = jnp.ones((4, 8), jnp.float32)
+    worker_events = []
+    barrier_err = []
+
+    def worker():
+        try:
+            # the main thread's recorder must not see this...
+            ops.matmul(a, b, site="worker.untracked")
+            # ...and a worker-local recorder sees only its own
+            with DispatchRecorder() as wrec:
+                ops.matmul(a, b, site="worker.tracked")
+            worker_events.extend(wrec.events)
+        except Exception as e:  # pragma: no cover - surfaced below
+            barrier_err.append(e)
+
+    with DispatchRecorder() as rec:
+        t = threading.Thread(target=worker)
+        t.start()
+        t.join()
+        ops.matmul(a, b, site="main")
+    assert not barrier_err
+    assert [e.site for e in rec.events] == ["main"]
+    assert [e.site for e in worker_events] == ["worker.tracked"]
+
+
+def test_record_is_noop_when_inactive():
+    assert not recorder.active()
+    recorder.record("gemm", 8, 8, 8)           # must not raise
+    assert recorder.active_event_count() == 0
+    with DispatchRecorder() as rec:
+        assert recorder.active()
+    # exited recorder no longer accumulates
+    recorder.record("gemm", 8, 8, 8)
+    assert rec.events == []
+    # and ops run identically with nobody watching
+    a = jnp.ones((8, 4), jnp.float32)
+    b = jnp.ones((4, 8), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(ops.matmul(a, b)),
+                                  np.asarray(a @ b))
+
+
+def test_summary_routine_mix_and_assert_only():
+    with DispatchRecorder() as rec:
+        recorder.record("gemm", 64, 64, 64, site="a")
+        recorder.record("gemm", 64, 64, 64, cache_hit=True, site="a")
+        recorder.record("syrk", 64, 64, 64, site="b")
+    s = rec.summary()
+    assert s["gemm"]["events"] == 2 and s["gemm"]["cache_hits"] == 1
+    # syrk charges the triangular fraction: half a gemm's flops here
+    assert s["syrk"]["flops"] == pytest.approx(s["gemm"]["flops"] / 4)
+    mix_e = rec.routine_mix(by="events")
+    assert mix_e == {"gemm": pytest.approx(2 / 3),
+                     "syrk": pytest.approx(1 / 3)}
+    mix_f = rec.routine_mix()
+    assert mix_f["gemm"] == pytest.approx(0.8)
+    assert mix_f["syrk"] == pytest.approx(0.2)
+    rec.assert_only(["gemm", "syrk"])
+    with pytest.raises(AssertionError, match="outside allowed"):
+        rec.assert_only(["gemm"])
+    with pytest.raises(ValueError, match="expected 'flops'"):
+        rec.routine_mix(by="bytes")
+    rec.clear()
+    assert rec.routine_mix() == {}
+
+
+def test_event_count_weights_flops_and_event_mix():
+    """A vmapped site traced once with count=N weighs like N dispatches."""
+    with DispatchRecorder() as rec:
+        recorder.record("gemm", 64, 64, 64)
+        recorder.record("syrk", 64, 64, 64, count=8)
+    e_gemm, e_syrk = rec.events
+    assert e_syrk.flops == pytest.approx(8 * 0.5 * e_gemm.flops)
+    s = rec.summary()
+    assert s["syrk"]["events"] == 1 and s["syrk"]["dispatches"] == 8
+    mix_e = rec.routine_mix(by="events")
+    assert mix_e["syrk"] == pytest.approx(8 / 9)
+    mix_f = rec.routine_mix()
+    assert mix_f["syrk"] == pytest.approx(4 / 5)
+
+
+def test_explicit_tile_bypasses_tuner_and_config_label(tiny_artifact):
+    """An explicit tile overrides the tuner: no consult, and the event
+    must not claim a config that was never dispatched."""
+    tuner = AdsalaTuner.from_artifact(tiny_artifact.dir)
+    calls_before = tuner.stats["calls"]
+    a = jnp.ones((16, 8), jnp.float32)
+    b = jnp.ones((8, 16), jnp.float32)
+    with DispatchRecorder() as rec:
+        ops.matmul(a, b, tuner=tuner, tile=(8, 8, 8))
+    assert tuner.stats["calls"] == calls_before
+    assert rec.events[0].config is None
+
+
+def test_grouped_dispatch_hint_records_per_expert():
+    shapes = [(32, 16, 24)] * 3
+    with DispatchRecorder() as rec:
+        hints = ops.grouped_dispatch_hint(shapes, None, site="moe.test")
+    assert hints is None                        # untuned: no configs...
+    assert len(rec.events) == 3                 # ...but still observable
+    assert all(e.site == "moe.test" and e.routine == "gemm"
+               for e in rec.events)
+
+
+def test_syrk_rejects_mismatched_second_operand():
+    a = jnp.ones((8, 4), jnp.float32)
+    with pytest.raises(ValueError, match="SYRK-shaped"):
+        ops.syrk(a, jnp.ones((6, 4), jnp.float32))
+
+
+def test_observe_skips_tuner_when_no_recorder(tiny_artifact):
+    """Observability-only sites must not pay tuner lookups (or pollute
+    its LRU with fused hint shapes) when nobody is watching."""
+    tuner = AdsalaTuner.from_artifact(tiny_artifact.dir)
+    calls_before = dict(tuner.stats)
+    ops.observe(23, 29, 31, tuner, routine="syrk", site="idle")
+    assert tuner.stats == calls_before
+    assert not tuner.peek(23, 29, 31, "syrk")
+    with pytest.raises(ValueError, match="unknown routine"):
+        ops.observe(8, 8, 8, tuner, routine="herk")   # validated anyway
+    with DispatchRecorder() as rec:
+        ops.observe(23, 29, 31, tuner, routine="syrk", site="watched")
+    assert rec.events[0].config is not None           # consulted now
+
+
+def test_windowed_attention_tagged_gemm_not_syrk():
+    """A sliding-window layer consumes a band, not the triangle — it
+    must not record (or price) as SYRK."""
+    spec = AttnSpec(d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+                    window=8)
+    x = jax.random.normal(jax.random.PRNGKey(0), (B, 24, 32), jnp.float32)
+    p = {
+        "wq": jax.random.normal(jax.random.PRNGKey(1), (32, 32)) * 0.1,
+        "wk": jax.random.normal(jax.random.PRNGKey(2), (32, 32)) * 0.1,
+        "wv": jax.random.normal(jax.random.PRNGKey(3), (32, 32)) * 0.1,
+        "wo": jax.random.normal(jax.random.PRNGKey(4), (32, 32)) * 0.1,
+    }
+    with DispatchRecorder() as rec:
+        attention_train(p, x, spec)
+    qk = rec.sites("attn.qk")
+    assert qk and all(e.routine == "gemm" for e in qk)
