@@ -1,0 +1,121 @@
+"""Workload-aware vs uniform installation at equal sample budget.
+
+Builds a decode-serve-like recorded dispatch profile, runs two installs
+with identical budget/models/candidates — one over the uniform Halton
+grid, one mix-weighted by the profile (ISSUE 5 tentpole) — and measures
+predicted-time *regret* of each resulting tuner on the profile's own
+shape distribution against the noise-free oracle:
+
+    regret = mean( t_clean(chosen) / t_clean(best) - 1 )
+
+Reports, as ``name,us_per_call,derived`` CSV lines, the two install
+wall-clocks, both regrets, and the improvement ratio.  ``--smoke``
+(used by the CI workload job) shrinks the budget to seconds and asserts
+the weighted install wins, so the headline property is continuously
+checked outside the test suite too.
+"""
+
+from __future__ import annotations
+
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import (
+    AdsalaTuner,
+    InstallConfig,
+    SimulatedBackend,
+    WorkloadProfile,
+    candidate_configs,
+    install,
+)
+from repro.kernels.recorder import DispatchEvent
+
+ROUTINES3 = ("gemm", "syrk", "trsm")
+
+
+def serve_profile() -> WorkloadProfile:
+    """Decode-serve-like mix: skinny projection gemms + per-head syrk
+    scores + a trsm-tagged cache update (cf. the PR 4 recorded mixes)."""
+    events = [
+        DispatchEvent("gemm", 64, 2048, 2048, count=96, site="proj"),
+        DispatchEvent("gemm", 64, 2048, 8192, count=32, site="mlp.up"),
+        DispatchEvent("gemm", 64, 8192, 2048, count=32, site="mlp.down"),
+        DispatchEvent("gemm", 64, 2048, 50257, count=1, site="logits"),
+        DispatchEvent("syrk", 512, 64, 512, count=64, site="attn.qk"),
+        DispatchEvent("trsm", 64, 64, 2048, count=16, site="cache"),
+    ]
+    return WorkloadProfile.from_events(
+        events, by="flops", source={"kind": "bench", "name": "decode"})
+
+
+def _regret(artifact: str, eval_dims: np.ndarray, names: list[str],
+            clean: np.ndarray, t_best: np.ndarray) -> float:
+    tuner = AdsalaTuner.from_artifact(artifact)
+    pred = tuner.predicted_times_many([tuple(d) for d in eval_dims],
+                                      routines=names)
+    chosen = clean[np.arange(len(eval_dims)), np.argmin(pred, axis=1)]
+    return float(np.mean(chosen / np.maximum(t_best, 1e-12) - 1.0))
+
+
+def run(smoke: bool = False) -> list[str]:
+    lines: list[str] = []
+    prof = serve_profile()
+    n_samples = 120 if smoke else 400
+    models = ("lightgbm",) if smoke else ("xgboost", "lightgbm")
+    backend = SimulatedBackend(seed=0)
+    base = dict(n_samples=n_samples, repeats=2, tile_ids=(0, 3),
+                routines=ROUTINES3, models=models,
+                cv_splits=2 if smoke else 3, seed=0)
+    cfg_u = InstallConfig(**base)
+    cfg_w = InstallConfig(**base, workload=prof, workload_bias=0.75)
+
+    walls = {}
+    arts = {}
+    for tag, cfg in (("uniform", cfg_u), ("weighted", cfg_w)):
+        arts[tag] = tempfile.mkdtemp(prefix=f"wl_{tag}_")
+        t0 = time.perf_counter()
+        install(backend, cfg, artifact_dir=arts[tag])
+        walls[tag] = time.perf_counter() - t0
+        lines.append(f"workload_install_{tag},{walls[tag] * 1e6:.0f},"
+                     f"{n_samples}dims_wall")
+
+    # eval set ~ the profile's own shape + routine distribution
+    n_eval = 80 if smoke else 200
+    eval_dims = prof.sample_dims(
+        n_eval, bias=1.0, mem_limit_bytes=cfg_u.mem_limit_bytes,
+        dtype_bytes=cfg_u.dtype_bytes, seed=1234)
+    quotas = prof.routine_quotas(ROUTINES3, n_eval, floor=0.0)
+    names = np.repeat(np.asarray(ROUTINES3, dtype=object),
+                      [quotas[r] for r in ROUTINES3])
+    names = list(names[np.random.default_rng(7).permutation(len(names))])
+    cands = candidate_configs(cfg_u.max_chips, tiles=cfg_u.tile_ids)
+    clean = backend.time_routine_clean_batch(eval_dims, cands,
+                                             routines=names)
+    t_best = clean.min(axis=1)
+
+    r_u = _regret(arts["uniform"], eval_dims, names, clean, t_best)
+    r_w = _regret(arts["weighted"], eval_dims, names, clean, t_best)
+    lines.append(f"workload_regret_uniform,{r_u * 1e6:.0f},"
+                 f"regret_x1e6_on_profile")
+    lines.append(f"workload_regret_weighted,{r_w * 1e6:.0f},"
+                 f"regret_x1e6_on_profile")
+    lines.append(f"workload_regret_improvement,"
+                 f"{r_u / max(r_w, 1e-9):.2f},x")
+    if smoke:
+        assert r_w < r_u, (
+            f"mix-weighted install regret {r_w:.4f} not below uniform "
+            f"{r_u:.4f} on the profile it was weighted by")
+    return lines
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv
+    for line in run(smoke=smoke):
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

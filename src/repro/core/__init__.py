@@ -21,7 +21,12 @@ from repro.core.costmodel import (
     estimate_routine_time,
     routine_ids,
 )
-from repro.core.halton import gemm_bytes, sample_gemm_dims, scrambled_halton
+from repro.core.halton import (
+    gemm_bytes,
+    sample_gemm_dims,
+    sample_gemm_dims_mixture,
+    scrambled_halton,
+)
 from repro.core.installer import (
     DEFAULT_WORKER_CONFIG,
     GatheredData,
@@ -38,6 +43,7 @@ from repro.core.timing import (
     time_routine_grid,
 )
 from repro.core.tuner import AdsalaTuner
+from repro.core.workload import WorkloadProfile
 
 __all__ = [
     "TPUSpec", "GemmConfig", "TimeBreakdown", "BatchBreakdown",
@@ -46,7 +52,8 @@ __all__ = [
     "estimate_gemm_time", "estimate_routine_time", "routine_ids",
     "estimate_batch", "estimate_batch_terms", "time_gemm_grid",
     "time_routine_grid",
-    "scrambled_halton", "sample_gemm_dims", "gemm_bytes",
+    "scrambled_halton", "sample_gemm_dims", "sample_gemm_dims_mixture",
+    "gemm_bytes", "WorkloadProfile",
     "InstallConfig", "GatheredData", "InstallReport", "gather_data",
     "install", "load_artifact", "DEFAULT_WORKER_CONFIG",
     "SimulatedBackend", "MeasuredCPUBackend",

@@ -20,6 +20,7 @@ __all__ = [
     "halton_sequence",
     "scrambled_halton",
     "sample_gemm_dims",
+    "sample_gemm_dims_mixture",
     "gemm_bytes",
 ]
 
@@ -125,3 +126,97 @@ def sample_gemm_dims(n_samples: int, *, mem_limit_bytes: int,
         if start > 10_000_000:  # pragma: no cover - domain misconfigured
             raise RuntimeError("halton rejection sampling failed to fill")
     return np.concatenate(accepted, axis=0)[:n_samples]
+
+
+def _sample_region(n: int, lo: np.ndarray, hi: np.ndarray, *,
+                   mem_limit_bytes: int, dim_min: int, dim_max: int,
+                   dtype_bytes: int, seed: int) -> np.ndarray:
+    """Up to ``n`` accepted samples inside one log2 box (rejection on the
+    memory budget; the box is clipped to the global dim range first)."""
+    lo = np.maximum(lo, np.log2(dim_min))
+    hi = np.minimum(hi, np.log2(dim_max))
+    if np.any(hi <= lo):                    # box outside the domain
+        return np.empty((0, 3), dtype=np.int64)
+    accepted: list[np.ndarray] = []
+    start, total, tried = 1, 0, 0
+    while total < n and tried < 64 * max(n, 8):
+        batch = max(64, 2 * (n - total))
+        u = scrambled_halton(batch, 3, seed=seed, start=start)
+        start += batch
+        tried += batch
+        dims = np.maximum(dim_min,
+                          np.round(np.exp2(lo + u * (hi - lo)))
+                          ).astype(np.int64)
+        keep = gemm_bytes(dims[:, 0], dims[:, 1], dims[:, 2],
+                          dtype_bytes) <= mem_limit_bytes
+        kept = dims[keep]
+        if kept.size:
+            accepted.append(kept)
+            total += len(kept)
+    if not accepted:
+        return np.empty((0, 3), dtype=np.int64)
+    return np.concatenate(accepted, axis=0)[:n]
+
+
+def sample_gemm_dims_mixture(
+        n_samples: int,
+        regions: list[tuple[tuple[float, float, float],
+                            tuple[float, float, float], float]], *,
+        mem_limit_bytes: int, bias: float = 0.75, dim_min: int = 8,
+        dim_max: int = 65536, dtype_bytes: int = 4, seed: int = 0,
+        log_space: bool = False) -> np.ndarray:
+    """Workload-biased (m, k, n) sampling (mixture of Halton streams).
+
+    ``regions`` is ``[(log2_lo, log2_hi, weight), ...]`` — typically a
+    :meth:`WorkloadProfile.region_boxes` shape histogram.  A ``bias``
+    fraction of the budget is apportioned across the regions by weight
+    and drawn from an independent scrambled-Halton stream per region
+    (low-discrepancy *within* each region, log-uniform over its box);
+    the remaining ``1 - bias`` is the uniform floor, drawn by
+    :func:`sample_gemm_dims` over the whole domain so coverage never
+    collapses onto the observed workload.  Regions that cannot fill
+    their quota (e.g. mostly above the memory budget) hand the
+    shortfall back to the floor.  The returned rows are shuffled with a
+    ``seed``-derived permutation so sample index carries no region
+    structure.  All samples respect the memory budget; deterministic
+    given ``seed``.
+    """
+    if not 0.0 <= bias <= 1.0:
+        raise ValueError(f"bias={bias} outside [0, 1]")
+    if not regions or bias == 0.0:
+        return sample_gemm_dims(
+            n_samples, mem_limit_bytes=mem_limit_bytes, dim_min=dim_min,
+            dim_max=dim_max, dtype_bytes=dtype_bytes, seed=seed,
+            log_space=log_space)
+    from repro.core.workload import apportion  # shared allocator
+
+    n_bias = int(round(bias * n_samples))
+    quotas = apportion([max(float(w), 0.0) for *_, w in regions], n_bias)
+    parts: list[np.ndarray] = []
+    drawn = 0
+    for i, ((lo, hi, _), q) in enumerate(zip(regions, quotas)):
+        if q <= 0:
+            continue
+        got = _sample_region(
+            q, np.asarray(lo, dtype=np.float64),
+            np.asarray(hi, dtype=np.float64),
+            mem_limit_bytes=mem_limit_bytes, dim_min=dim_min,
+            dim_max=dim_max, dtype_bytes=dtype_bytes,
+            seed=seed + 100_003 * (i + 1))
+        if got.size:
+            parts.append(got)
+            drawn += len(got)
+    n_floor = n_samples - drawn
+    if n_floor > 0:
+        parts.append(sample_gemm_dims(
+            n_floor, mem_limit_bytes=mem_limit_bytes, dim_min=dim_min,
+            dim_max=dim_max, dtype_bytes=dtype_bytes, seed=seed,
+            log_space=log_space))
+    dims = np.concatenate(parts, axis=0)[:n_samples]
+    # distinct stream from the caller's plain default_rng(seed): the
+    # installer permutes its routine assignment with exactly that rng
+    # over the same n, and two identical permutations cancel in the
+    # (dim, routine) pairing — routine id would re-align with the
+    # region block order, the very stratification this samples against
+    perm = np.random.default_rng([seed, 0x5A]).permutation(len(dims))
+    return dims[perm]

@@ -57,9 +57,19 @@ class InstallConfig:
     repeats: int = 3                      # paper: 10 iterations per input
     max_chips: int = 512
     #: BLAS-3 routines the install grid covers (arXiv 2406.19621:
-    #: routine-aware install).  Sampled dims cycle through these, so a
-    #: 3-routine install splits the budget ~evenly per routine.
+    #: routine-aware install).  Without a workload profile the budget is
+    #: split ~evenly per routine; with one, proportionally to the
+    #: profile's routine weights (with an even floor).
     routines: tuple[str, ...] = ("gemm",)
+    #: Recorded :class:`~repro.core.workload.WorkloadProfile` (or None):
+    #: when set, routine quotas follow the profile's routine weights and
+    #: ``workload_bias`` of the Halton budget is drawn from the
+    #: profile's observed shape regions instead of the uniform box.
+    workload: Any | None = None
+    #: fraction of samples biased toward the profile's shape regions
+    #: (and of the routine budget allocated proportionally); the
+    #: remaining ``1 - workload_bias`` is the uniform coverage floor.
+    workload_bias: float = 0.75
     tile_ids: tuple[int, ...] = (0, 1, 3, 5)
     train_cfgs_per_dim: int = 12          # row subsample for training
     models: tuple[str, ...] = (
@@ -101,6 +111,9 @@ class GatheredData:
     times: np.ndarray                      # (D, C) median seconds
     #: per-dim ROUTINES id; None means an all-gemm (pre-routine) grid
     routines: np.ndarray | None = None     # (D,) int64
+    #: WorkloadProfile.to_dict() provenance when the grid was
+    #: mix-weighted; None for uniform installs
+    workload: dict | None = None
 
     def routine_ids(self) -> np.ndarray:
         """(D,) ROUTINES ids, zeros for pre-routine grids."""
@@ -139,45 +152,120 @@ class GatheredData:
         return X, y
 
     def save(self, path: str) -> None:
+        extra = {}
+        if self.workload is not None:
+            extra["workload_json"] = np.asarray(json.dumps(self.workload))
         np.savez_compressed(
             path, dims=self.dims, times=self.times,
             routines=self.routine_ids(),
             cfg_chips=np.asarray([c.n_chips for c in self.cfgs]),
             cfg_tile=np.asarray([c.tile_id for c in self.cfgs]),
             cfg_part=np.asarray(
-                [_PARTITIONS.index(c.partition) for c in self.cfgs]))
+                [_PARTITIONS.index(c.partition) for c in self.cfgs]),
+            **extra)
 
     @classmethod
-    def load(cls, path: str) -> "GatheredData":
+    def load(cls, path: str, config: dict | str | None = None
+             ) -> "GatheredData":
+        """Load a persisted grid.
+
+        ``config`` is the install's sidecar ``config.json`` (a parsed
+        dict or a path to it); when given — or when a ``config.json``
+        sits next to the ``.npz`` — a grid whose npz predates the
+        ``routines`` array is cross-checked against it: if the sidecar
+        says the install was mixed-routine, the timing rows CANNOT all
+        be gemm, and silently labelling them so would poison any model
+        retrained from the file — raise instead.
+        """
         z = np.load(path)
         cfgs = [GemmConfig(int(c), _PARTITIONS[int(p)], int(t))
                 for c, t, p in zip(z["cfg_chips"], z["cfg_tile"],
                                    z["cfg_part"])]
         routines = (z["routines"].astype(np.int64)
                     if "routines" in z.files else None)
+        if isinstance(config, str):
+            with open(config) as f:
+                config = json.load(f)
+        elif config is None:
+            sidecar = os.path.join(os.path.dirname(os.path.abspath(path)),
+                                   "config.json")
+            if os.path.exists(sidecar):
+                with open(sidecar) as f:
+                    config = json.load(f)
+        if routines is None and config is not None:
+            installed = config.get("install", {}).get("routines")
+            if installed is not None and set(installed) != {"gemm"}:
+                raise ValueError(
+                    f"{path} has no 'routines' array but its install "
+                    f"config says the grid mixed routines {installed}; "
+                    "refusing to mislabel every timing row as gemm — "
+                    "re-gather the grid or load with the matching "
+                    "config.json")
+        workload = (json.loads(str(z["workload_json"]))
+                    if "workload_json" in z.files else None)
         return cls(dims=z["dims"], cfgs=cfgs, times=z["times"],
-                   routines=routines)
+                   routines=routines, workload=workload)
+
+
+def _assign_routines(cfg: InstallConfig, n: int) -> np.ndarray:
+    """Per-dim ROUTINES ids for an ``n``-sample grid.
+
+    Budget split: even across ``cfg.routines`` without a workload
+    profile, quota-weighted with one.  Assignment order is a seeded
+    permutation, NOT ``i % len(routines)`` cycling: the Halton sequence
+    is deterministic and low-discrepancy, so a fixed index stride is
+    itself low-discrepancy *within each residue class* — routine id
+    becomes perfectly correlated with sample index and every routine
+    trains on a systematically different stratum of the shape box (the
+    base-3 column's leading digit cycles with period 3, exactly the
+    stride a 3-routine install used).  The permutation decouples them
+    while staying reproducible via ``cfg.seed``.
+    """
+    if cfg.workload is not None:
+        quotas = cfg.workload.routine_quotas(
+            cfg.routines, n, floor=1.0 - cfg.workload_bias)
+        counts = [quotas[r] for r in cfg.routines]
+    else:
+        counts = [len(range(i, n, len(cfg.routines)))
+                  for i in range(len(cfg.routines))]
+    names = np.repeat(np.asarray(cfg.routines, dtype=object), counts)
+    perm = np.random.default_rng(cfg.seed).permutation(n)
+    return routine_ids(list(names[perm]), n)
 
 
 def gather_data(backend: TimingBackend, cfg: InstallConfig) -> GatheredData:
     """Paper Fig 2 'data gathering': Halton-sample the domain, run each
     (input x worker-config) ``repeats`` times, keep the median.
 
-    The sampled dims cycle through ``cfg.routines`` so a mixed-routine
-    install covers every routine with ~n_samples/len(routines) inputs;
-    the whole grid is still timed in batched passes (one per repeat).
+    A mixed-routine install spreads the budget over ``cfg.routines``
+    (see :func:`_assign_routines`); the whole grid is still timed in
+    batched passes (one per repeat).  With ``cfg.workload`` set, the
+    sampled dims are drawn from the profile's observed shape regions
+    (``cfg.workload_bias`` fraction, uniform floor for the rest) and
+    the routine budget follows the profile's routine weights — install
+    effort goes where serving volume actually is.
     """
-    dims = sample_gemm_dims(
-        cfg.n_samples, mem_limit_bytes=cfg.mem_limit_bytes,
-        dtype_bytes=cfg.dtype_bytes, seed=cfg.seed,
-        dim_min=cfg.dim_min, dim_max=cfg.dim_max, log_space=cfg.log_space)
+    if cfg.workload is not None:
+        dims = cfg.workload.sample_dims(
+            cfg.n_samples, bias=cfg.workload_bias,
+            mem_limit_bytes=cfg.mem_limit_bytes,
+            dtype_bytes=cfg.dtype_bytes, seed=cfg.seed,
+            dim_min=cfg.dim_min, dim_max=cfg.dim_max,
+            log_space=cfg.log_space)
+    else:
+        dims = sample_gemm_dims(
+            cfg.n_samples, mem_limit_bytes=cfg.mem_limit_bytes,
+            dtype_bytes=cfg.dtype_bytes, seed=cfg.seed,
+            dim_min=cfg.dim_min, dim_max=cfg.dim_max,
+            log_space=cfg.log_space)
     cfgs = costmodel.candidate_configs(cfg.max_chips, tiles=cfg.tile_ids)
-    per_dim = [cfg.routines[i % len(cfg.routines)]
-               for i in range(len(dims))]
-    rids = routine_ids(per_dim, len(dims))
+    rids = _assign_routines(cfg, len(dims))
     times = time_routine_grid(backend, dims, cfgs, cfg.repeats,
                               routines=rids)
-    return GatheredData(dims=dims, cfgs=cfgs, times=times, routines=rids)
+    return GatheredData(
+        dims=dims, cfgs=cfgs, times=times, routines=rids,
+        workload=(None if cfg.workload is None
+                  else cfg.workload.to_dict()))
 
 
 @dataclasses.dataclass
@@ -445,7 +533,15 @@ def install(backend: TimingBackend | None = None,
                     "mem_limit_mb": cfg.mem_limit_mb,
                     "dtype_bytes": cfg.dtype_bytes,
                     "repeats": cfg.repeats, "seed": cfg.seed,
-                    "routines": list(cfg.routines)},
+                    "routines": list(cfg.routines),
+                    "workload_bias": cfg.workload_bias},
+                # WorkloadProfile provenance: the recorded mix this grid
+                # was weighted by (None = uniform install).  Surfaced by
+                # tuner.from_artifact so serve can warn when the live
+                # mix drifts from what was installed.
+                "workload": data.workload if data.workload is not None
+                else (cfg.workload.to_dict()
+                      if cfg.workload is not None else None),
                 "selection": [r.to_dict() for r in reports],
                 "selected": selected,
                 # v2: cache keys are (routine, m, k, n).  v1 blocks (no

@@ -27,6 +27,7 @@ tuner refuses rather than hand out gemm-quality picks for them.
 from __future__ import annotations
 
 import collections
+import warnings
 from typing import Any, Iterable
 
 import numpy as np
@@ -35,6 +36,7 @@ from repro.core.costmodel import GemmConfig, ROUTINES, routine_ids
 from repro.core.features import build_features
 from repro.core.installer import load_artifact
 from repro.core.preprocessing import PreprocessPipeline
+from repro.core.workload import WorkloadProfile
 
 __all__ = ["AdsalaTuner"]
 
@@ -57,7 +59,8 @@ class AdsalaTuner:
                  max_chips: int | None = None,
                  cache_size: int = 256,
                  feature_names: list[str] | None = None,
-                 routines: tuple[str, ...] | None = None) -> None:
+                 routines: tuple[str, ...] | None = None,
+                 workload: WorkloadProfile | None = None) -> None:
         if max_chips is not None:
             candidates = [c for c in candidates if c.n_chips <= max_chips]
         if not candidates:
@@ -66,6 +69,10 @@ class AdsalaTuner:
         self.pipe = pipe
         self.candidates = candidates
         self.cache_size = cache_size
+        #: the WorkloadProfile the install grid was weighted by (None =
+        #: uniform install / no provenance).  Serving code compares the
+        #: live recorded mix against it (see :meth:`workload_drift`).
+        self.workload = workload
         # GEMM-only artifacts predate the routine feature columns; keep
         # feeding their models the exact legacy layout.
         self._legacy_features = (feature_names is not None
@@ -101,6 +108,9 @@ class AdsalaTuner:
         installed = config.get("install", {}).get("routines")
         if installed is not None:
             kw.setdefault("routines", tuple(installed))
+        if config.get("workload") is not None:
+            kw.setdefault("workload",
+                          WorkloadProfile.from_dict(config["workload"]))
         tuner = cls(model, pipe, cands, **kw)
         ws = config.get("warm_start")
         # A max_chips filter renumbers/narrows the candidate set, so the
@@ -115,10 +125,38 @@ class AdsalaTuner:
             # v1 blocks (pre-routine artifacts) carry no "routines" list:
             # every entry is a gemm choice.  v2 stores one routine per dim.
             routines = ws.get("routines") or ["gemm"] * len(ws["dims"])
-            tuner.warm_start(
-                ((r, *d), cands[int(j)])
-                for r, d, j in zip(routines, ws["dims"], ws["best"]))
+            # Validate against what the model has signal for: a
+            # hand-edited or mixed-version artifact can carry warm
+            # entries for routines outside the installed set (or argmin
+            # indices outside the candidate list).  Preloading those
+            # would serve stale predictions from cache hits where live
+            # dispatch degrades to gemm / raises — drop them instead.
+            entries, dropped = [], 0
+            for r, d, j in zip(routines, ws["dims"], ws["best"]):
+                if (r not in tuner.routines or len(d) != 3
+                        or not 0 <= int(j) < len(cands)):
+                    dropped += 1
+                    continue
+                entries.append(((r, *d), cands[int(j)]))
+            if dropped:
+                warnings.warn(
+                    f"{artifact_dir}: dropped {dropped}/{len(routines)} "
+                    f"warm-start entries outside the installed routines "
+                    f"{tuner.routines} / candidate range (hand-edited "
+                    "or mixed-version artifact?)", stacklevel=2)
+            tuner.warm_start(entries)
         return tuner
+
+    def workload_drift(self, observed_mix: dict[str, float]
+                       ) -> float | None:
+        """Total-variation distance between the artifact's installed
+        workload-profile routine mix and an observed serving mix (e.g.
+        ``DispatchRecorder.routine_mix()``); None when the artifact
+        carries no profile.  Large values mean the install budget was
+        spent on a different workload than the one being served."""
+        if self.workload is None:
+            return None
+        return self.workload.drift(observed_mix)
 
     # ------------------------------------------------------------------
     def _key(self, m: int, k: int, n: int, routine: str = "gemm") -> Key:

@@ -208,3 +208,24 @@ class DispatchRecorder:
     def sites(self, prefix: str = "") -> list[DispatchEvent]:
         """Events whose call-site label starts with ``prefix``."""
         return [e for e in self.events if e.site.startswith(prefix)]
+
+    def shape_table(self) -> list[dict]:
+        """Aggregated totals per distinct ``(routine, m, k, n)``, sorted
+        by descending flop volume.
+
+        This is the shape-level view a
+        :class:`~repro.core.workload.WorkloadProfile` is built from
+        (``dispatches`` carries the count-weighted multiplicity), and
+        what ``repro.launch.dryrun`` persists per cell so install grids
+        can be weighted by recorded workloads offline.
+        """
+        agg: dict[tuple, dict] = {}
+        for e in self.events:
+            key = (e.routine, e.m, e.k, e.n)
+            row = agg.setdefault(key, {
+                "routine": e.routine, "m": e.m, "k": e.k, "n": e.n,
+                "events": 0, "dispatches": 0, "flops": 0.0})
+            row["events"] += 1
+            row["dispatches"] += e.count
+            row["flops"] += e.flops
+        return sorted(agg.values(), key=lambda r: -r["flops"])

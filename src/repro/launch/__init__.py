@@ -1,1 +1,2 @@
-"""Launchers: mesh, dryrun, train, serve."""
+"""Launchers: mesh, dryrun, train, serve, profile (dryrun -> workload
+profile -> mix-weighted install)."""

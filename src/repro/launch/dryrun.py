@@ -222,6 +222,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             "routine_mix": rec.routine_mix(),
             "routine_mix_events": rec.routine_mix(by="events"),
             "summary": rec.summary(),
+            # aggregated (routine, m, k, n) rows: what
+            # repro.launch.profile folds into a WorkloadProfile to
+            # weight the install grid by this cell's workload
+            "shapes": rec.shape_table(),
         },
         "model": {
             "params": cfg.param_count(),

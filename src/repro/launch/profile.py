@@ -1,0 +1,130 @@
+"""Workload profiling entry point: dryrun → profile → install.
+
+Folds the per-cell ``dispatch`` blocks that ``repro.launch.dryrun``
+persists (and/or serve profiles written by ``repro.launch.serve
+--profile-out``) into one merged :class:`~repro.core.workload.
+WorkloadProfile`, writes it out, and optionally runs a mix-weighted
+ADSALA install driven by it:
+
+    # 1. dry-run some cells (separate process; see dryrun docstring)
+    PYTHONPATH=src python -m repro.launch.dryrun --arch stablelm-1.6b
+    # 2. fold the recorded mixes into a profile and install against it
+    PYTHONPATH=src python -m repro.launch.profile \
+        --dryrun-dir results/dryrun --out results/workload_profile.json \
+        --install --artifact results/adsala_artifact_workload
+
+Cells are merged proportionally to their recorded flop volume — an arch
+that dispatches 10x the contraction flops pulls the install budget 10x
+harder toward its shapes.  This module never imports jax: it reads the
+persisted JSON blocks, so profiling + installing runs anywhere.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+from repro.core import InstallConfig, SimulatedBackend, install
+from repro.core.costmodel import ROUTINES
+from repro.core.workload import WorkloadProfile
+
+
+def profiles_from_dryrun(dryrun_dir: str, *, arch: str | None = None,
+                         shape: str | None = None,
+                         mesh: str | None = None, by: str = "flops"
+                         ) -> list[WorkloadProfile]:
+    """One profile per ok dry-run cell JSON (optionally filtered)."""
+    out: list[WorkloadProfile] = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            cell = json.load(f)
+        if cell.get("status") != "ok" or "dispatch" not in cell:
+            continue
+        if arch is not None and cell.get("arch") != arch:
+            continue
+        if shape is not None and cell.get("shape") != shape:
+            continue
+        if mesh is not None and cell.get("mesh") != mesh:
+            continue
+        out.append(WorkloadProfile.from_dispatch_block(
+            cell["dispatch"], by=by,
+            source={"kind": "dryrun", "arch": cell.get("arch"),
+                    "shape": cell.get("shape"),
+                    "mesh": cell.get("mesh"), "path": path}))
+    return out
+
+
+def build_profile(args: argparse.Namespace) -> WorkloadProfile:
+    profiles: list[WorkloadProfile] = []
+    if args.dryrun_dir:
+        profiles += profiles_from_dryrun(
+            args.dryrun_dir, arch=args.arch, shape=args.shape,
+            mesh=args.mesh, by=args.by)
+    for path in args.profile or []:
+        profiles.append(WorkloadProfile.load(path))
+    if not profiles:
+        sys.exit(f"[profile] no dispatch blocks under "
+                 f"{args.dryrun_dir!r} and no --profile files; run "
+                 "repro.launch.dryrun (or serve --profile-out) first")
+    if len(profiles) == 1:
+        return profiles[0]
+    return WorkloadProfile.merge(profiles)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="fold recorded dispatch mixes into a WorkloadProfile "
+                    "and (optionally) run a mix-weighted install")
+    ap.add_argument("--dryrun-dir", default="results/dryrun",
+                    help="directory of repro.launch.dryrun cell JSONs")
+    ap.add_argument("--profile", action="append", default=None,
+                    help="extra WorkloadProfile JSON(s) to merge in "
+                         "(e.g. from serve --profile-out); repeatable")
+    ap.add_argument("--arch", default=None,
+                    help="only fold cells of this arch")
+    ap.add_argument("--shape", default=None,
+                    help="only fold cells of this shape (e.g. "
+                         "decode_32k for a decode-serving profile)")
+    ap.add_argument("--mesh", default=None, choices=["single", "multi"],
+                    help="only fold cells on this mesh")
+    ap.add_argument("--by", default="flops",
+                    choices=["flops", "events"],
+                    help="dispatch-volume weighting of the profile")
+    ap.add_argument("--out", default="results/workload_profile.json")
+    ap.add_argument("--install", action="store_true",
+                    help="run a mix-weighted install driven by the "
+                         "profile (simulated v5e backend)")
+    ap.add_argument("--artifact", default="results/adsala_artifact_workload")
+    ap.add_argument("--samples", type=int, default=400,
+                    help="install budget (paper scale: 1763)")
+    ap.add_argument("--bias", type=float, default=0.75,
+                    help="fraction of the budget biased toward the "
+                         "profile's shape regions / routine mix")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    profile = build_profile(args)
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    profile.save(args.out)
+    print(f"[profile] merged profile -> {args.out}")
+    print(profile.table())
+
+    if not args.install:
+        return
+    # install over every known routine: observed ones get the lion's
+    # share via the profile quotas, unobserved ones keep floor coverage
+    cfg = InstallConfig(
+        n_samples=args.samples, routines=tuple(ROUTINES),
+        workload=profile, workload_bias=args.bias, seed=args.seed)
+    print(f"[profile] mix-weighted install: {args.samples} samples, "
+          f"bias {args.bias} -> {args.artifact}")
+    report = install(SimulatedBackend(seed=args.seed), cfg,
+                     artifact_dir=args.artifact, verbose=True)
+    print(report.table())
+
+
+if __name__ == "__main__":
+    main()

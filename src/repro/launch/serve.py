@@ -23,6 +23,10 @@ from repro.configs import ARCH_IDS, build_model, get_config, get_smoke_config
 from repro.models.transformer import Ctx
 from repro.train.step import make_ctx
 
+#: total-variation distance between the serving routine mix and the
+#: installed workload profile above which serve warns (0 = identical)
+DRIFT_WARN = 0.25
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -33,6 +37,17 @@ def main() -> None:
     ap.add_argument("--gen-tokens", type=int, default=16)
     ap.add_argument("--artifact", default=None,
                     help="ADSALA artifact dir (tuner enabled when set)")
+    ap.add_argument("--profile-out", default=None,
+                    help="write the recorded dispatch mix as a "
+                         "WorkloadProfile JSON (feed it back into the "
+                         "installer via repro.launch.profile)")
+    ap.add_argument("--profile-by", default="flops",
+                    choices=["flops", "events"],
+                    help="dispatch-volume weighting of --profile-out; "
+                         "keep the default to merge with dry-run "
+                         "profiles (repro.launch.profile uses flops "
+                         "weighting by default, and mixed weightings "
+                         "refuse to merge)")
     args = ap.parse_args()
 
     cfg = (get_config if args.scale == "full"
@@ -110,6 +125,29 @@ def main() -> None:
               f"over {len(rec.events)} traced events")
     if tuner is not None:
         print(f"[serve] tuner stats: {tuner.stats}")
+        # compare the live mix against the profile the install grid was
+        # weighted by (same weighting the profile was built with)
+        if tuner.workload is not None and rec.events:
+            drift = tuner.workload_drift(
+                rec.routine_mix(by=tuner.workload.by))
+            print(f"[serve] workload drift vs installed profile: "
+                  f"{drift:.3f} (total variation)")
+            if drift > DRIFT_WARN:
+                print(f"[serve] WARNING: serving mix drifted "
+                      f"{drift:.2f} > {DRIFT_WARN} from the installed "
+                      "workload profile — the install budget was spent "
+                      "on a different routine mix; re-profile and "
+                      "re-install (repro.launch.profile)")
+    if args.profile_out:
+        from repro.core.workload import WorkloadProfile
+        prof = WorkloadProfile.from_recorder(
+            rec, by=args.profile_by,
+            source={"kind": "serve", "arch": cfg.name,
+                    "requests": args.requests,
+                    "prompt_len": args.prompt_len,
+                    "gen_tokens": args.gen_tokens})
+        prof.save(args.profile_out)
+        print(f"[serve] workload profile written to {args.profile_out}")
 
 
 if __name__ == "__main__":

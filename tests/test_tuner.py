@@ -118,7 +118,10 @@ def test_gemm_only_install_refuses_unseen_routines(tiny_artifact,
     config["install"]["routines"] = ["gemm"]
     json.dump(config, open(cfg_path, "w"))
 
-    tuner = AdsalaTuner.from_artifact(str(gemm_only))
+    # the intact v2 warm_start now carries syrk/trsm entries the edited
+    # install no longer claims — from_artifact drops them with a warning
+    with pytest.warns(UserWarning, match="dropped"):
+        tuner = AdsalaTuner.from_artifact(str(gemm_only))
     assert tuner.routines == ("gemm",)
     assert isinstance(tuner.select(512, 512, 512), GemmConfig)
     with pytest.raises(ValueError, match="no training signal"):
@@ -234,6 +237,84 @@ def test_artifact_v1_warm_start_loads_as_gemm(tiny_artifact, tmp_path):
     m, k, n = config["warm_start"]["dims"][0]
     tuner.select(m, k, n)
     assert tuner.stats == {"calls": 1, "cache_hits": 1, "evaluations": 0}
+
+
+def test_warm_start_entries_outside_installed_routines_dropped(
+        tiny_artifact, tmp_path):
+    """A hand-edited / mixed-version artifact whose warm_start block
+    carries routines the install never covered must not preload them:
+    a stale cache hit would serve a prediction the model has no signal
+    for, where live dispatch degrades to gemm or raises."""
+    import json
+    import shutil
+    mixed = tmp_path / "hand_edited"
+    shutil.copytree(tiny_artifact.dir, mixed)
+    cfg_path = mixed / "config.json"
+    config = json.load(open(cfg_path))
+    # claim a gemm-only install but leave the v2 mixed warm_start intact
+    config["install"]["routines"] = ["gemm"]
+    json.dump(config, open(cfg_path, "w"))
+
+    n_gemm = config["warm_start"]["routines"].count("gemm")
+    with pytest.warns(UserWarning, match="dropped"):
+        tuner = AdsalaTuner.from_artifact(str(mixed))
+    assert tuner.routines == ("gemm",)
+    assert len(tuner._cache) == n_gemm
+    assert all(key[0] == "gemm" for key in tuner._cache)
+    # the syrk shapes that were in the block now raise like live
+    # dispatch instead of serving a stale preloaded choice
+    i = config["warm_start"]["routines"].index("syrk")
+    m, k, n = config["warm_start"]["dims"][i]
+    with pytest.raises(ValueError, match="no training signal"):
+        tuner.select(m, k, n, "syrk")
+
+
+def test_warm_start_out_of_range_best_index_dropped(tiny_artifact,
+                                                    tmp_path):
+    """Argmin indices outside the candidate list (candidate set from a
+    different install version) are dropped, not IndexError'd."""
+    import json
+    import shutil
+    broken = tmp_path / "bad_index"
+    shutil.copytree(tiny_artifact.dir, broken)
+    cfg_path = broken / "config.json"
+    config = json.load(open(cfg_path))
+    n_cands = len(config["candidates"])
+    config["warm_start"]["best"][0] = n_cands + 7
+    config["warm_start"]["best"][1] = -1
+    json.dump(config, open(cfg_path, "w"))
+
+    with pytest.warns(UserWarning, match="dropped 2/"):
+        tuner = AdsalaTuner.from_artifact(str(broken))
+    assert len(tuner._cache) == tiny_artifact.cfg.n_samples - 2
+    # the dropped shapes fall back to a cold evaluation, not a crash
+    ws = config["warm_start"]
+    cfg = tuner.select(*ws["dims"][0], ws["routines"][0])
+    assert isinstance(cfg, GemmConfig)
+    assert tuner.stats["evaluations"] == 1
+
+
+def test_warm_start_v1_block_with_unknown_routine_key(tiny_artifact,
+                                                      tmp_path):
+    """v1-gemm-only path: a legacy block hand-edited with a bogus
+    routines list on a gemm-only install keeps only valid entries."""
+    import json
+    import shutil
+    legacy = tmp_path / "v1_bogus"
+    shutil.copytree(tiny_artifact.dir, legacy)
+    cfg_path = legacy / "config.json"
+    config = json.load(open(cfg_path))
+    config["install"]["routines"] = ["gemm"]
+    dims = config["warm_start"]["dims"]
+    config["warm_start"] = {
+        "dims": dims, "best": config["warm_start"]["best"],
+        "routines": ["gemm"] * (len(dims) - 1) + ["trsm"]}
+    json.dump(config, open(cfg_path, "w"))
+
+    with pytest.warns(UserWarning, match="dropped 1/"):
+        tuner = AdsalaTuner.from_artifact(str(legacy))
+    assert len(tuner._cache) == len(dims) - 1
+    assert all(key[0] == "gemm" for key in tuner._cache)
 
 
 def test_artifact_warm_start_skipped_when_candidates_filtered(
