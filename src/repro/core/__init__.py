@@ -3,6 +3,13 @@
 Pipeline:  halton -> timing backend -> features/preprocessing -> ml zoo
            -> installer (Fig 2) -> artifact -> AdsalaTuner (Fig 3)
            -> tuned GEMM dispatch (repro.kernels.ops.tuned_matmul).
+
+One search harness sits under all of it: a declarative
+:class:`~repro.core.search.ConfigSpace` (axes + admissibility gates)
+turned into a :class:`~repro.core.search.SearchGraph` and explored by
+:func:`~repro.core.search.beam_search` — the installer times its
+survivors under a budget, the tuner beam-searches at dispatch on cache
+miss, and ``candidate_configs`` is its exhaustive enumeration.
 """
 
 from repro.core.costmodel import (
@@ -36,10 +43,20 @@ from repro.core.installer import (
     install,
     load_artifact,
 )
+from repro.core.search import (
+    Axis,
+    BeamResult,
+    ConfigSpace,
+    Gate,
+    SearchGraph,
+    beam_search,
+    exhaustive_best,
+)
 from repro.core.timing import (
     MeasuredCPUBackend,
     SimulatedBackend,
     time_gemm_grid,
+    time_routine_cells,
     time_routine_grid,
 )
 from repro.core.tuner import AdsalaTuner
@@ -51,7 +68,9 @@ __all__ = [
     "candidate_configs",
     "estimate_gemm_time", "estimate_routine_time", "routine_ids",
     "estimate_batch", "estimate_batch_terms", "time_gemm_grid",
-    "time_routine_grid",
+    "time_routine_grid", "time_routine_cells",
+    "Axis", "Gate", "ConfigSpace", "SearchGraph", "BeamResult",
+    "beam_search", "exhaustive_best",
     "scrambled_halton", "sample_gemm_dims", "sample_gemm_dims_mixture",
     "gemm_bytes", "WorkloadProfile",
     "InstallConfig", "GatheredData", "InstallReport", "gather_data",

@@ -44,9 +44,11 @@ import numpy as np
 
 __all__ = [
     "TPUSpec", "GemmConfig", "TimeBreakdown", "BatchBreakdown",
-    "candidate_configs", "config_arrays", "estimate_gemm_time",
+    "candidate_configs", "chip_doublings", "config_arrays",
+    "estimate_gemm_time",
     "estimate_routine_time", "estimate_batch_terms", "estimate_batch",
-    "DEFAULT_TILES", "ROUTINES", "DEFAULT_ROUTINE", "TRSM_SEQ_CHIPS",
+    "DEFAULT_TILES", "EXTENDED_TILES", "PARTITIONS",
+    "ROUTINES", "DEFAULT_ROUTINE", "TRSM_SEQ_CHIPS",
     "routine_ids",
 ]
 
@@ -58,8 +60,13 @@ ROUTINES: tuple[str, ...] = ("gemm", "syrk", "trsm")
 #: a requested routine fall back to it — always ROUTINES[0].
 DEFAULT_ROUTINE: str = ROUTINES[0]
 
-#: Max chips that help along TRSM's sequential (M) dimension — the
-#: substitution pipeline depth.  Chips beyond this idle on that axis.
+#: Default depth of TRSM's substitution pipeline along the sequential
+#: (M) dimension: at most this many chips help on that axis; the rest
+#: idle waiting on their predecessors' panels.  Since the search-space
+#: refactor this is a *per-config knob* (``GemmConfig.trsm_seq_chips``,
+#: an axis of the enlarged :class:`~repro.core.search.ConfigSpace`);
+#: this constant is the historical default every pre-search config
+#: carries.
 TRSM_SEQ_CHIPS = 4
 
 
@@ -127,30 +134,51 @@ DEFAULT_TILES: tuple[tuple[int, int, int], ...] = (
     (512, 128, 128),
 )
 
-_PARTITIONS = ("M", "N", "K", "2D")
+#: DEFAULT_TILES plus the presets only reachable through an explicitly
+#: enlarged search space (``ConfigSpace.enlarged``).  The classic ids
+#: 0..7 are unchanged, so every pre-search artifact / candidate list
+#: keeps meaning exactly what it meant; ``candidate_configs`` defaults
+#: stay on DEFAULT_TILES for bit-for-bit compatibility.
+EXTENDED_TILES: tuple[tuple[int, int, int], ...] = DEFAULT_TILES + (
+    (256, 512, 256),
+    (512, 256, 512),
+    (128, 256, 128),
+    (1024, 128, 128),
+)
+
+PARTITIONS = ("M", "N", "K", "2D")
+_PARTITIONS = PARTITIONS          # pre-refactor private alias
 
 
 @dataclasses.dataclass(frozen=True)
 class GemmConfig:
     """One candidate worker configuration = the paper's 'thread count'.
 
-    n_chips   — submesh size the GEMM is dispatched on (1..512)
-    partition — which GEMM dimension(s) the submesh shards
-    tile_id   — index into DEFAULT_TILES for the per-chip Pallas kernel
+    n_chips        — submesh size the GEMM is dispatched on (1..512)
+    partition      — which GEMM dimension(s) the submesh shards
+    tile_id        — index into EXTENDED_TILES for the per-chip Pallas
+                     kernel (ids 0..7 are the classic DEFAULT_TILES)
+    trsm_seq_chips — TRSM substitution-pipeline depth: how many chips the
+                     kernel lets cooperate along the sequential M axis.
+                     Ignored by gemm/syrk.  Defaults to the historical
+                     constant so three-argument construction (and every
+                     persisted artifact) keeps its exact old meaning.
     """
     n_chips: int
     partition: str
     tile_id: int
+    trsm_seq_chips: int = TRSM_SEQ_CHIPS
 
     @property
     def tile(self) -> tuple[int, int, int]:
-        return DEFAULT_TILES[self.tile_id]
+        return EXTENDED_TILES[self.tile_id]
 
     @property
     def config_id(self) -> int:
         """Stable integer id (used for memoisation / logging)."""
-        return (self.tile_id * len(_PARTITIONS)
-                + _PARTITIONS.index(self.partition)) * 1024 + self.n_chips
+        return ((self.tile_id * len(_PARTITIONS)
+                 + _PARTITIONS.index(self.partition)) * 64
+                + self.trsm_seq_chips) * 1024 + self.n_chips
 
 
 @dataclasses.dataclass
@@ -170,22 +198,41 @@ class TimeBreakdown:
             + self.launch_s
 
 
+def chip_doublings(max_chips: int) -> list[int]:
+    """Power-of-two chip counts up to ``max_chips``: ``[1, 2, 4, ...]``.
+
+    Non-power-of-two values are truncated down to the largest power of
+    two ``<= max_chips`` (``6 -> [1, 2, 4]``) — the behaviour the install
+    grid has always had, now documented instead of silent.  ``max_chips``
+    must be a positive integer; the historical ``int(math.log2(...))``
+    raised a bare ``ValueError: math domain error`` on ``max_chips <= 0``.
+    """
+    if isinstance(max_chips, bool) or not isinstance(
+            max_chips, (int, np.integer)):
+        raise ValueError(
+            f"max_chips must be an integer, got {max_chips!r}")
+    if max_chips < 1:
+        raise ValueError(f"max_chips must be >= 1, got {max_chips}")
+    return [2 ** i for i in range(int(max_chips).bit_length())]
+
+
 def candidate_configs(max_chips: int = 512, *,
                       tiles: Iterable[int] | None = None,
                       partitions: Iterable[str] = _PARTITIONS
                       ) -> list[GemmConfig]:
-    """The candidate set the tuner argmins over (paper: 1..n_cores)."""
-    chips = [2 ** i for i in range(int(math.log2(max_chips)) + 1)]
-    tile_ids = list(tiles) if tiles is not None else list(
-        range(len(DEFAULT_TILES)))
-    out = []
-    for c in chips:
-        for p in partitions:
-            if p == "2D" and c < 4:
-                continue  # 2D sharding needs a 2D submesh
-            for t in tile_ids:
-                out.append(GemmConfig(c, p, t))
-    return out
+    """The candidate set the tuner argmins over (paper: 1..n_cores).
+
+    Since the search refactor this is a thin exhaustive enumeration of
+    the *default* :class:`~repro.core.search.ConfigSpace` — bit-for-bit
+    the list the historical triple loop produced (chip doublings outer,
+    then partitions with the 2D >= 4-chip gate, then tiles).  Callers
+    wanting a larger space (extended tiles, 3*2^k chip counts, the TRSM
+    pipeline knob) build a space explicitly and search it instead of
+    enumerating.
+    """
+    from repro.core.search.space import ConfigSpace  # lazy: avoid cycle
+    return ConfigSpace.default(max_chips, tiles=tiles,
+                               partitions=partitions).enumerate()
 
 
 def _ceil_div(a: int, b: int) -> int:
@@ -197,12 +244,13 @@ def _local_shape(m: int, k: int, n: int, cfg: GemmConfig,
     """Per-chip problem extents under the chosen partitioning.
 
     TRSM's substitution dependency runs along M: sharding M (directly or
-    via 2D) only helps up to ``TRSM_SEQ_CHIPS`` chips — the rest wait on
-    their predecessors' panels.
+    via 2D) only helps up to ``cfg.trsm_seq_chips`` chips (the config's
+    pipeline-depth knob; default = the historical constant) — the rest
+    wait on their predecessors' panels.
     """
     p = cfg.n_chips
     if cfg.partition == "M":
-        pm = min(p, TRSM_SEQ_CHIPS) if routine == "trsm" else p
+        pm = min(p, cfg.trsm_seq_chips) if routine == "trsm" else p
         return _ceil_div(m, pm), k, n
     if cfg.partition == "N":
         return m, k, _ceil_div(n, p)
@@ -212,7 +260,7 @@ def _local_shape(m: int, k: int, n: int, cfg: GemmConfig,
     pm = 2 ** (int(math.log2(p)) // 2)
     pn = p // pm
     if routine == "trsm":
-        pm = min(pm, TRSM_SEQ_CHIPS)
+        pm = min(pm, cfg.trsm_seq_chips)
     return _ceil_div(m, pm), k, _ceil_div(n, pn)
 
 
@@ -242,7 +290,7 @@ def _collective_bytes(m: int, k: int, n: int, cfg: GemmConfig,
     pm = 2 ** (int(math.log2(p)) // 2)
     pn = p // pm
     if routine == "trsm":
-        pm = min(pm, TRSM_SEQ_CHIPS)
+        pm = min(pm, cfg.trsm_seq_chips)
     bytes_a = (pn - 1) / pn * (m // max(pm, 1)) * k * dtype_bytes
     bytes_b = (pm - 1) / pm * k * (n // max(pn, 1)) * dtype_bytes
     return bytes_a + bytes_b, 2
@@ -379,6 +427,8 @@ def config_arrays(cfgs: list[GemmConfig]) -> dict[str, np.ndarray]:
         "partition": np.asarray(
             [_PARTITIONS.index(c.partition) for c in cfgs], dtype=np.int64),
         "tile_id": np.asarray([c.tile_id for c in cfgs], dtype=np.int64),
+        "trsm_seq_chips": np.asarray(
+            [c.trsm_seq_chips for c in cfgs], dtype=np.int64),
         "bm": tiles[:, 0], "bk": tiles[:, 1], "bn": tiles[:, 2],
     }
 
@@ -431,16 +481,19 @@ def estimate_batch_terms(dims: np.ndarray, cfgs: list[GemmConfig],
     ca = config_arrays(cfgs)
 
     # Local shapes, collectives and launch cost are tile-independent, so
-    # compute them once per unique (n_chips, partition) pair — typically
-    # ~8x fewer columns than the full candidate set — and gather back to
-    # (D, C) by index afterwards.  (Routine only varies along D, so the
-    # dedup over config columns survives the routine axis.)
-    pp_keys = ca["partition"] * (int(ca["n_chips"].max()) + 1) \
-        + ca["n_chips"]
+    # compute them once per unique (n_chips, partition, trsm_seq_chips)
+    # triple — typically ~8x fewer columns than the full candidate set —
+    # and gather back to (D, C) by index afterwards.  (Routine only
+    # varies along D, so the dedup over config columns survives the
+    # routine axis.)
+    max_seq = int(ca["trsm_seq_chips"].max())
+    pp_keys = (ca["partition"] * (int(ca["n_chips"].max()) + 1)
+               + ca["n_chips"]) * (max_seq + 1) + ca["trsm_seq_chips"]
     _, uniq_idx, inv = np.unique(pp_keys, return_index=True,
                                  return_inverse=True)
     p = ca["n_chips"][None, uniq_idx].astype(np.float64)    # (1, U)
     part = ca["partition"][None, uniq_idx]
+    seq = ca["trsm_seq_chips"][None, uniq_idx].astype(np.float64)
 
     # ---- local shapes under each partitioning ----------------------------
     # 2D factorisation: p -> (pm, pn), the two most square power factors.
@@ -451,11 +504,12 @@ def estimate_batch_terms(dims: np.ndarray, cfgs: list[GemmConfig],
     is_k = part == _PARTITIONS.index("K")
     is_2d = part == _PARTITIONS.index("2D")
 
-    # TRSM: at most TRSM_SEQ_CHIPS chips help along the sequential M axis
+    # TRSM: at most trsm_seq_chips chips help along the sequential M axis
+    # (per-config pipeline-depth knob; every classic config carries the
+    # historical default)
     if any_trsm:
-        p_m = np.where(is_trsm_d, np.minimum(p, float(TRSM_SEQ_CHIPS)), p)
-        pm2d_eff = np.where(is_trsm_d,
-                            np.minimum(pm2d, float(TRSM_SEQ_CHIPS)), pm2d)
+        p_m = np.where(is_trsm_d, np.minimum(p, seq), p)
+        pm2d_eff = np.where(is_trsm_d, np.minimum(pm2d, seq), pm2d)
     else:
         p_m, pm2d_eff = p, pm2d
 

@@ -24,7 +24,11 @@ __all__ = [
     "gemm_bytes",
 ]
 
-_DEFAULT_BASES = (2, 3, 5)
+# First six primes: (m, k, n) sampling uses the leading three; the
+# config-space lattice sampler (ConfigSpace.sample) draws one base per
+# axis and enlarged spaces have four axes.  Extra bases never change the
+# leading columns — each dimension's stream only depends on its own base.
+_DEFAULT_BASES = (2, 3, 5, 7, 11, 13)
 
 
 def _digit_permutations(base: int, rng: np.random.Generator) -> np.ndarray:

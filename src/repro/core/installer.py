@@ -33,6 +33,7 @@ from repro.core.preprocessing import PreprocessPipeline
 from repro.core.timing import (
     SimulatedBackend,
     TimingBackend,
+    time_routine_cells,
     time_routine_grid,
 )
 
@@ -92,14 +93,54 @@ class InstallConfig:
     #: cold (hit rate 0) estimate is reported alongside.
     cache_hit_rate: float = 0.9
     default_config: GemmConfig = DEFAULT_WORKER_CONFIG
+    #: Declarative candidate space (a repro.core.search.ConfigSpace).
+    #: None means the default space implied by (max_chips, tile_ids) —
+    #: whose enumeration is bit-for-bit the historical candidate list.
+    space: Any | None = None
+    #: Total (dim, config) cells the install may *time*.  None keeps the
+    #: dense grid (every dim x every config).  A budget switches
+    #: gather_data to beam-survivor timing: per dim, the analytic cost
+    #: model beam-searches the space and only the leaders (plus a
+    #: low-discrepancy exploration slice and the default config) are
+    #: actually measured — the effective candidate space can grow 10x
+    #: without 10x timing cost.
+    timing_budget: int | None = None
+    #: beam width for budgeted installs (and the README comparison)
+    beam_width: int = 8
+    #: fraction of each dim's timing quota spent on Halton-sampled
+    #: exploration configs instead of beam survivors (guards the model
+    #: against the prior's blind spots)
+    explore_fraction: float = 0.25
 
     @property
     def mem_limit_bytes(self) -> int:
         return self.mem_limit_mb * 2**20
 
+    def resolved_space(self):
+        """The ConfigSpace this install searches/enumerates."""
+        from repro.core.search.space import ConfigSpace  # local: no cycle
+        if self.space is not None:
+            return self.space
+        return ConfigSpace.default(self.max_chips, tiles=self.tile_ids)
+
 
 def default_config(**overrides: Any) -> InstallConfig:
     return dataclasses.replace(InstallConfig(), **overrides)
+
+
+def _config_dict(c: GemmConfig) -> dict:
+    """JSON form of a config; the TRSM knob only appears when it left
+    the historical default, so pre-search readers keep parsing."""
+    d = {"n_chips": c.n_chips, "partition": c.partition,
+         "tile_id": c.tile_id}
+    if c.trsm_seq_chips != costmodel.TRSM_SEQ_CHIPS:
+        d["trsm_seq_chips"] = c.trsm_seq_chips
+    return d
+
+
+def _config_from_dict(d: dict) -> GemmConfig:
+    return GemmConfig(d["n_chips"], d["partition"], d["tile_id"],
+                      d.get("trsm_seq_chips", costmodel.TRSM_SEQ_CHIPS))
 
 
 @dataclasses.dataclass
@@ -114,6 +155,13 @@ class GatheredData:
     #: WorkloadProfile.to_dict() provenance when the grid was
     #: mix-weighted; None for uniform installs
     workload: dict | None = None
+    #: (D, C) bool — which cells were actually timed.  None means a
+    #: dense grid (every cell).  Budgeted installs only time beam
+    #: survivors + exploration configs; un-timed cells hold +inf.
+    mask: np.ndarray | None = None
+    #: ConfigSpace.to_dict() provenance of the space the candidate
+    #: columns came from; None for pre-search grids.
+    space: dict | None = None
 
     def routine_ids(self) -> np.ndarray:
         """(D,) ROUTINES ids, zeros for pre-routine grids."""
@@ -124,20 +172,32 @@ class GatheredData:
     def routine_names(self) -> list[str]:
         return [ROUTINES[int(r)] for r in self.routine_ids()]
 
+    def timed_mask(self) -> np.ndarray:
+        """(D, C) bool of measured cells (all True for dense grids)."""
+        if self.mask is None:
+            return np.ones(self.times.shape, dtype=bool)
+        return np.asarray(self.mask, dtype=bool)
+
     def optimal_worker_index(self) -> np.ndarray:
-        return np.argmin(self.times, axis=1)
+        if self.mask is None:
+            return np.argmin(self.times, axis=1)
+        return np.argmin(np.where(self.timed_mask(), self.times, np.inf),
+                         axis=1)
 
     def to_rows(self, *, per_dim: int | None = None, seed: int = 0
                 ) -> tuple[np.ndarray, np.ndarray]:
         """(X_features, y_log_time) long format, optionally subsampling
-        configs per dim (the paper separates runs per thread count)."""
+        configs per dim (the paper separates runs per thread count).
+        Only timed cells become rows (budgeted grids are sparse)."""
         rng = np.random.default_rng(seed)
         D, C = self.times.shape
         rids = self.routine_ids()
+        timed = self.timed_mask()
         rows_X, rows_y = [], []
         for i in range(D):
-            js = (np.arange(C) if per_dim is None or per_dim >= C
-                  else rng.choice(C, size=per_dim, replace=False))
+            pool = np.flatnonzero(timed[i])
+            js = (pool if per_dim is None or per_dim >= len(pool)
+                  else rng.choice(pool, size=per_dim, replace=False))
             m, k, n = self.dims[i]
             for j in js:
                 cfg = self.cfgs[j]
@@ -155,6 +215,10 @@ class GatheredData:
         extra = {}
         if self.workload is not None:
             extra["workload_json"] = np.asarray(json.dumps(self.workload))
+        if self.mask is not None:
+            extra["mask"] = self.timed_mask().astype(np.uint8)
+        if self.space is not None:
+            extra["space_json"] = np.asarray(json.dumps(self.space))
         np.savez_compressed(
             path, dims=self.dims, times=self.times,
             routines=self.routine_ids(),
@@ -162,6 +226,8 @@ class GatheredData:
             cfg_tile=np.asarray([c.tile_id for c in self.cfgs]),
             cfg_part=np.asarray(
                 [_PARTITIONS.index(c.partition) for c in self.cfgs]),
+            cfg_seq=np.asarray(
+                [c.trsm_seq_chips for c in self.cfgs]),
             **extra)
 
     @classmethod
@@ -178,9 +244,12 @@ class GatheredData:
         retrained from the file — raise instead.
         """
         z = np.load(path)
-        cfgs = [GemmConfig(int(c), _PARTITIONS[int(p)], int(t))
-                for c, t, p in zip(z["cfg_chips"], z["cfg_tile"],
-                                   z["cfg_part"])]
+        seqs = (z["cfg_seq"] if "cfg_seq" in z.files
+                else np.full(len(z["cfg_chips"]),
+                             costmodel.TRSM_SEQ_CHIPS))
+        cfgs = [GemmConfig(int(c), _PARTITIONS[int(p)], int(t), int(s))
+                for c, t, p, s in zip(z["cfg_chips"], z["cfg_tile"],
+                                      z["cfg_part"], seqs)]
         routines = (z["routines"].astype(np.int64)
                     if "routines" in z.files else None)
         if isinstance(config, str):
@@ -203,8 +272,12 @@ class GatheredData:
                     "config.json")
         workload = (json.loads(str(z["workload_json"]))
                     if "workload_json" in z.files else None)
+        mask = (z["mask"].astype(bool) if "mask" in z.files else None)
+        space = (json.loads(str(z["space_json"]))
+                 if "space_json" in z.files else None)
         return cls(dims=z["dims"], cfgs=cfgs, times=z["times"],
-                   routines=routines, workload=workload)
+                   routines=routines, workload=workload, mask=mask,
+                   space=space)
 
 
 def _assign_routines(cfg: InstallConfig, n: int) -> np.ndarray:
@@ -244,6 +317,16 @@ def gather_data(backend: TimingBackend, cfg: InstallConfig) -> GatheredData:
     (``cfg.workload_bias`` fraction, uniform floor for the rest) and
     the routine budget follows the profile's routine weights — install
     effort goes where serving volume actually is.
+
+    Candidate generation routes through ``cfg.resolved_space()``.
+    Without a ``timing_budget`` the space is enumerated and every
+    (dim x config) cell is timed — for the default space that is
+    bit-for-bit the historical grid.  With a budget, an analytic-model
+    beam search (:func:`repro.core.search.beam.beam_search`) picks each
+    dim's most promising configs and only those — plus a Halton
+    exploration slice shared across dims and the always-timed default
+    config — are measured; the rest of the grid stays +inf behind
+    ``GatheredData.mask``.
     """
     if cfg.workload is not None:
         dims = cfg.workload.sample_dims(
@@ -258,14 +341,50 @@ def gather_data(backend: TimingBackend, cfg: InstallConfig) -> GatheredData:
             dtype_bytes=cfg.dtype_bytes, seed=cfg.seed,
             dim_min=cfg.dim_min, dim_max=cfg.dim_max,
             log_space=cfg.log_space)
-    cfgs = costmodel.candidate_configs(cfg.max_chips, tiles=cfg.tile_ids)
+    space = cfg.resolved_space()
     rids = _assign_routines(cfg, len(dims))
-    times = time_routine_grid(backend, dims, cfgs, cfg.repeats,
-                              routines=rids)
-    return GatheredData(
-        dims=dims, cfgs=cfgs, times=times, routines=rids,
-        workload=(None if cfg.workload is None
-                  else cfg.workload.to_dict()))
+    workload = None if cfg.workload is None else cfg.workload.to_dict()
+
+    if cfg.timing_budget is None:
+        cfgs = space.enumerate()
+        times = time_routine_grid(backend, dims, cfgs, cfg.repeats,
+                                  routines=rids)
+        return GatheredData(dims=dims, cfgs=cfgs, times=times,
+                            routines=rids, workload=workload,
+                            space=space.to_dict())
+
+    # --- budgeted install: time beam survivors, not the grid --------------
+    from repro.core.search.beam import beam_search  # local: no cycle
+
+    D = len(dims)
+    quota = max(2, cfg.timing_budget // D)     # cells per dim, >= 2
+    n_explore = int(round(cfg.explore_fraction * (quota - 1)))
+    n_beam = max(1, quota - 1 - n_explore)
+    beam = beam_search(dims, space, width=max(cfg.beam_width, n_beam),
+                       top_k=n_beam, routines=rids,
+                       spec=getattr(backend, "spec", None),
+                       dtype_bytes=cfg.dtype_bytes)
+    explore = space.sample(n_explore, seed=cfg.seed) if n_explore else []
+
+    col: dict[GemmConfig, int] = {}
+    rows_js: list[list[int]] = []
+    for d in range(D):
+        js = []
+        for c in [cfg.default_config] + beam.configs[d] + explore:
+            if c not in col:
+                col[c] = len(col)
+            if col[c] not in js:
+                js.append(col[c])
+        rows_js.append(js)
+    cfgs = list(col)
+    mask = np.zeros((D, len(cfgs)), dtype=bool)
+    for d, js in enumerate(rows_js):
+        mask[d, js] = True
+    times = time_routine_cells(backend, dims, cfgs, mask, cfg.repeats,
+                               routines=rids)
+    return GatheredData(dims=dims, cfgs=cfgs, times=times, routines=rids,
+                        workload=workload, mask=mask,
+                        space=space.to_dict())
 
 
 @dataclasses.dataclass
@@ -360,13 +479,15 @@ def _measure_eval_time(model: Any, pipe: PreprocessPipeline,
 
 def _predict_best_configs(model: Any, pipe: PreprocessPipeline,
                           dims: np.ndarray, cfgs: list[GemmConfig],
-                          routines: np.ndarray | None = None
-                          ) -> np.ndarray:
+                          routines: np.ndarray | None = None,
+                          mask: np.ndarray | None = None) -> np.ndarray:
     """Predicted-argmin candidate index for every dim, shape (D,).
 
     Delegates to the runtime tuner's own batched prediction so the
     persisted warm-start choices are, by construction, exactly what the
-    tuner would compute for the same artifact.
+    tuner would compute for the same artifact.  With ``mask`` (budgeted
+    installs) the argmin is restricted to each dim's timed columns —
+    the model may only pick configs whose ground truth exists.
     """
     from repro.core.tuner import AdsalaTuner  # local: breaks import cycle
 
@@ -374,6 +495,8 @@ def _predict_best_configs(model: Any, pipe: PreprocessPipeline,
     times = tuner.predicted_times_many(
         [(int(m), int(k), int(n)) for m, k, n in np.asarray(dims)],
         routines=None if routines is None else list(routines))
+    if mask is not None:
+        times = np.where(np.asarray(mask, dtype=bool), times, np.inf)
     return np.argmin(times, axis=1)
 
 
@@ -393,9 +516,10 @@ def _speedups(model: Any, pipe: PreprocessPipeline, data: GatheredData,
         j_default = int(np.argmax(chips))
     rids = data.routine_ids()[test_dims_idx]
     t_orig = data.times[test_dims_idx, j_default]
-    best_j = _predict_best_configs(model, pipe, data.dims[test_dims_idx],
-                                   cfgs, routines=rids)
-    t_chosen = data.times[test_dims_idx, best_j]
+    best_j = _predict_best_configs(
+        model, pipe, data.dims[test_dims_idx], cfgs, routines=rids,
+        mask=None if data.mask is None else data.mask[test_dims_idx])
+    t_chosen = data.times[np.asarray(test_dims_idx), best_j]
     warm_eval = (1.0 - cfg.cache_hit_rate) * eval_time_s
 
     def _stats(orig: np.ndarray, chosen: np.ndarray
@@ -451,14 +575,18 @@ def install(backend: TimingBackend | None = None,
     rids = data.routine_ids()
     train_data = GatheredData(dims=data.dims[train_mask], cfgs=data.cfgs,
                               times=data.times[train_mask],
-                              routines=rids[train_mask])
+                              routines=rids[train_mask],
+                              mask=None if data.mask is None
+                              else data.mask[train_mask])
     test_idx = np.asarray(sorted(test_dims), dtype=int)
 
     X_train, y_train = train_data.to_rows(per_dim=cfg.train_cfgs_per_dim,
                                           seed=cfg.seed)
     test_rows = GatheredData(dims=data.dims[test_idx], cfgs=data.cfgs,
                              times=data.times[test_idx],
-                             routines=rids[test_idx])
+                             routines=rids[test_idx],
+                             mask=None if data.mask is None
+                             else data.mask[test_idx])
     X_test, y_test = test_rows.to_rows(per_dim=cfg.train_cfgs_per_dim,
                                        seed=cfg.seed + 1)
 
@@ -514,27 +642,32 @@ def install(backend: TimingBackend | None = None,
         # of paying t_eval on first sight of the trained-on shapes.
         warm_best = _predict_best_configs(fitted[selected], pipe,
                                           data.dims, data.cfgs,
-                                          routines=data.routine_ids())
+                                          routines=data.routine_ids(),
+                                          mask=data.mask)
         # paper Fig 2: "two files ... the configurations together with the
         # production-ready ML model"
         with open(os.path.join(artifact_dir, "config.json"), "w") as f:
             json.dump({
                 "feature_names": FEATURE_NAMES,
                 "preprocess": pipe.to_dict(),
-                "candidates": [
-                    {"n_chips": c.n_chips, "partition": c.partition,
-                     "tile_id": c.tile_id} for c in data.cfgs],
-                "default_config": {
-                    "n_chips": cfg.default_config.n_chips,
-                    "partition": cfg.default_config.partition,
-                    "tile_id": cfg.default_config.tile_id},
+                "candidates": [_config_dict(c) for c in data.cfgs],
+                "default_config": _config_dict(cfg.default_config),
+                # the declarative space the candidates came from —
+                # from_artifact reconstructs it exactly, so dispatch-time
+                # search explores the same space the install searched
+                "space": (data.space if data.space is not None
+                          else cfg.resolved_space().to_dict()),
                 "install": {
                     "n_samples": cfg.n_samples,
                     "mem_limit_mb": cfg.mem_limit_mb,
                     "dtype_bytes": cfg.dtype_bytes,
                     "repeats": cfg.repeats, "seed": cfg.seed,
                     "routines": list(cfg.routines),
-                    "workload_bias": cfg.workload_bias},
+                    "workload_bias": cfg.workload_bias,
+                    "max_chips": cfg.max_chips,
+                    "tile_ids": list(cfg.tile_ids),
+                    "timing_budget": cfg.timing_budget,
+                    "beam_width": cfg.beam_width},
                 # WorkloadProfile provenance: the recorded mix this grid
                 # was weighted by (None = uniform install).  Surfaced by
                 # tuner.from_artifact so serve can warn when the live
@@ -544,15 +677,19 @@ def install(backend: TimingBackend | None = None,
                       if cfg.workload is not None else None),
                 "selection": [r.to_dict() for r in reports],
                 "selected": selected,
-                # v2: cache keys are (routine, m, k, n).  v1 blocks (no
-                # "version"/"routines") are still read by from_artifact
-                # as all-gemm entries.
+                # v3: explicit config dicts, validated against the
+                # persisted space on load (beam-found configs need not
+                # sit in any fixed candidate list).  v2 stored argmin
+                # *indices* with (routine, m, k, n) keys; v1 blocks (no
+                # "version"/"routines") are all-gemm.  from_artifact
+                # reads all three.
                 "warm_start": {
-                    "version": 2,
+                    "version": 3,
                     "dims": np.asarray(data.dims,
                                        dtype=np.int64).tolist(),
                     "routines": data.routine_names(),
-                    "best": warm_best.astype(int).tolist()},
+                    "configs": [_config_dict(data.cfgs[int(j)])
+                                for j in warm_best]},
             }, f, indent=1)
         with open(os.path.join(artifact_dir, "model.json"), "w") as f:
             json.dump(fitted[selected].to_dict(), f)
@@ -567,6 +704,5 @@ def load_artifact(artifact_dir: str) -> tuple[Any, PreprocessPipeline,
     with open(os.path.join(artifact_dir, "model.json")) as f:
         model = model_from_dict(json.load(f))
     pipe = PreprocessPipeline.from_dict(config["preprocess"])
-    cands = [GemmConfig(d["n_chips"], d["partition"], d["tile_id"])
-             for d in config["candidates"]]
+    cands = [_config_from_dict(d) for d in config["candidates"]]
     return model, pipe, cands, config

@@ -32,7 +32,7 @@ from repro.core.costmodel import (
 )
 
 __all__ = ["TimingBackend", "SimulatedBackend", "MeasuredCPUBackend",
-           "time_gemm_grid", "time_routine_grid"]
+           "time_gemm_grid", "time_routine_grid", "time_routine_cells"]
 
 
 class TimingBackend(Protocol):
@@ -73,6 +73,56 @@ def time_routine_grid(backend: "TimingBackend", dims: np.ndarray,
                         for _ in range(repeats)]
             elif routine == "gemm":
                 reps = [backend.time_gemm(int(m), int(k), int(n), c)
+                        for _ in range(repeats)]
+            else:
+                raise TypeError(
+                    f"backend {type(backend).__name__} cannot time "
+                    f"routine {routine!r}: it has neither "
+                    "time_routine(_batch) nor a gemm-only grid")
+            times[i, j] = float(np.median(reps))
+    return times
+
+
+def time_routine_cells(backend: "TimingBackend", dims: np.ndarray,
+                       cfgs: list[GemmConfig], mask: np.ndarray,
+                       repeats: int, *, routines=None) -> np.ndarray:
+    """Median-of-``repeats`` timing of only the ``mask``-selected
+    (dim, config) cells; the rest of the (D, C) matrix is +inf.
+
+    The sparse counterpart of :func:`time_routine_grid` for budgeted
+    installs: a beam search has already decided which cells are worth
+    measuring, so a backend with a batched path gets one per-dim batch
+    over that dim's selected columns per repeat, and scalar backends
+    loop only the selected cells — timing cost scales with
+    ``mask.sum()``, not ``D * C``.
+    """
+    dims = np.asarray(dims, dtype=np.int64)
+    rids = routine_ids(routines, len(dims))
+    mask = np.asarray(mask, dtype=bool)
+    if mask.shape != (len(dims), len(cfgs)):
+        raise ValueError(f"mask shape {mask.shape} != "
+                         f"({len(dims)}, {len(cfgs)})")
+    times = np.full((len(dims), len(cfgs)), np.inf)
+    batch = getattr(backend, "time_routine_batch", None)
+    scalar = getattr(backend, "time_routine", None)
+    for i, (m, k, n) in enumerate(dims):
+        js = np.flatnonzero(mask[i])
+        if not len(js):
+            continue
+        if batch is not None:
+            sub = [cfgs[j] for j in js]
+            reps = np.stack([batch(dims[i:i + 1], sub,
+                                   routines=rids[i:i + 1])[0]
+                             for _ in range(repeats)])
+            times[i, js] = np.median(reps, axis=0)
+            continue
+        routine = ROUTINES[int(rids[i])]
+        for j in js:
+            if scalar is not None:
+                reps = [scalar(int(m), int(k), int(n), cfgs[j],
+                               routine=routine) for _ in range(repeats)]
+            elif routine == "gemm":
+                reps = [backend.time_gemm(int(m), int(k), int(n), cfgs[j])
                         for _ in range(repeats)]
             else:
                 raise TypeError(

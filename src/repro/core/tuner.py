@@ -32,10 +32,18 @@ from typing import Any, Iterable
 
 import numpy as np
 
-from repro.core.costmodel import GemmConfig, ROUTINES, routine_ids
+from repro.core.costmodel import (
+    GemmConfig,
+    PARTITIONS,
+    ROUTINES,
+    TRSM_SEQ_CHIPS,
+    routine_ids,
+)
 from repro.core.features import build_features
 from repro.core.installer import load_artifact
 from repro.core.preprocessing import PreprocessPipeline
+from repro.core.search.beam import beam_search
+from repro.core.search.space import ConfigSpace
 from repro.core.workload import WorkloadProfile
 
 __all__ = ["AdsalaTuner"]
@@ -60,7 +68,9 @@ class AdsalaTuner:
                  cache_size: int = 256,
                  feature_names: list[str] | None = None,
                  routines: tuple[str, ...] | None = None,
-                 workload: WorkloadProfile | None = None) -> None:
+                 workload: WorkloadProfile | None = None,
+                 space: ConfigSpace | None = None,
+                 search_width: int | None = None) -> None:
         if max_chips is not None:
             candidates = [c for c in candidates if c.n_chips <= max_chips]
         if not candidates:
@@ -69,6 +79,21 @@ class AdsalaTuner:
         self.pipe = pipe
         self.candidates = candidates
         self.cache_size = cache_size
+        #: the ConfigSpace dispatch-time search explores.  Artifacts
+        #: since the search refactor persist theirs (``"space"`` block);
+        #: otherwise reconstruct the default space the candidate list
+        #: implies, so ``select(search=...)`` always has one.
+        if space is None:
+            present = tuple(p for p in PARTITIONS
+                            if any(c.partition == p for c in candidates))
+            space = ConfigSpace.default(
+                max(c.n_chips for c in candidates),
+                tiles=tuple(sorted({c.tile_id for c in candidates})),
+                partitions=present)
+        self.space = space
+        #: default beam width for ``select(search=True)``; None means
+        #: fixed-candidate argmin unless a call opts in.
+        self.search_width = search_width
         #: the WorkloadProfile the install grid was weighted by (None =
         #: uniform install / no provenance).  Serving code compares the
         #: live recorded mix against it (see :meth:`workload_drift`).
@@ -111,10 +136,15 @@ class AdsalaTuner:
         if config.get("workload") is not None:
             kw.setdefault("workload",
                           WorkloadProfile.from_dict(config["workload"]))
+        # Post-refactor artifacts persist the exact space the install
+        # searched; legacy ones fall back to the constructor's implied
+        # default space (reconstructed from the candidate list).
+        if config.get("space") is not None:
+            kw.setdefault("space", ConfigSpace.from_dict(config["space"]))
         tuner = cls(model, pipe, cands, **kw)
         ws = config.get("warm_start")
         # A max_chips filter renumbers/narrows the candidate set, so the
-        # persisted argmin indices no longer describe this tuner's search
+        # persisted warm choices no longer describe this tuner's search
         # space — start cold in that case.
         if ws and kw.get("max_chips") is None:
             if "cache_size" not in kw:
@@ -123,26 +153,45 @@ class AdsalaTuner:
                 # warm set survives; an explicit cache_size wins.
                 tuner.cache_size = max(tuner.cache_size, len(ws["dims"]))
             # v1 blocks (pre-routine artifacts) carry no "routines" list:
-            # every entry is a gemm choice.  v2 stores one routine per dim.
+            # every entry is a gemm choice.  v2 stores argmin indices
+            # into the candidate list; v3 stores explicit config dicts
+            # (beam-found configs need not sit in a fixed list).
             routines = ws.get("routines") or ["gemm"] * len(ws["dims"])
             # Validate against what the model has signal for: a
             # hand-edited or mixed-version artifact can carry warm
-            # entries for routines outside the installed set (or argmin
-            # indices outside the candidate list).  Preloading those
-            # would serve stale predictions from cache hits where live
-            # dispatch degrades to gemm / raises — drop them instead.
+            # entries for routines outside the installed set, argmin
+            # indices outside the candidate list, or configs outside
+            # the persisted space.  Preloading those would serve stale
+            # predictions from cache hits where live dispatch degrades
+            # to gemm / raises — drop them instead.
             entries, dropped = [], 0
-            for r, d, j in zip(routines, ws["dims"], ws["best"]):
-                if (r not in tuner.routines or len(d) != 3
-                        or not 0 <= int(j) < len(cands)):
-                    dropped += 1
-                    continue
-                entries.append(((r, *d), cands[int(j)]))
+            if int(ws.get("version", 1)) >= 3:
+                for r, d, cd in zip(routines, ws["dims"], ws["configs"]):
+                    try:
+                        c = GemmConfig(cd["n_chips"], cd["partition"],
+                                       cd["tile_id"],
+                                       cd.get("trsm_seq_chips",
+                                              TRSM_SEQ_CHIPS))
+                    except (KeyError, TypeError):
+                        dropped += 1
+                        continue
+                    if (r not in tuner.routines or len(d) != 3
+                            or not tuner.space.contains(c)):
+                        dropped += 1
+                        continue
+                    entries.append(((r, *d), c))
+            else:
+                for r, d, j in zip(routines, ws["dims"], ws["best"]):
+                    if (r not in tuner.routines or len(d) != 3
+                            or not 0 <= int(j) < len(cands)):
+                        dropped += 1
+                        continue
+                    entries.append(((r, *d), cands[int(j)]))
             if dropped:
                 warnings.warn(
                     f"{artifact_dir}: dropped {dropped}/{len(routines)} "
                     f"warm-start entries outside the installed routines "
-                    f"{tuner.routines} / candidate range (hand-edited "
+                    f"{tuner.routines} / candidate space (hand-edited "
                     "or mixed-version artifact?)", stacklevel=2)
             tuner.warm_start(entries)
         return tuner
@@ -196,15 +245,29 @@ class AdsalaTuner:
     _PREDICT_CHUNK = 16
 
     def predicted_times_many(self, shapes: Iterable[tuple[int, int, int]],
-                             routines=None) -> np.ndarray:
+                             routines=None, *,
+                             candidates: list[GemmConfig] | None = None
+                             ) -> np.ndarray:
         """Predicted runtimes for every (shape x candidate), shape (S, C).
 
         Batched feature build + preprocess + model predict; chunked to
         ``_PREDICT_CHUNK`` shapes per predict call to stay cache-resident.
         ``routines`` is None (all gemm), one name, or one name/id per
-        shape.
+        shape.  ``candidates`` overrides the tuner's fixed list — this is
+        how beam search prices arbitrary frontier configs with the same
+        model (the feature set carries no ``trsm_seq_chips`` column, so
+        configs differing only in that knob predict identically).
         """
-        C = len(self.candidates)
+        if candidates is None:
+            cands = self.candidates
+            chips, tiles, parts = self._chips, self._tiles, self._parts
+        else:
+            cands = list(candidates)
+            chips = np.asarray([c.n_chips for c in cands], float)
+            tiles = np.asarray([c.tile_id for c in cands], float)
+            parts = np.asarray(
+                [_PARTITIONS.index(c.partition) for c in cands], float)
+        C = len(cands)
         shapes = list(shapes)
         if not shapes:
             return np.empty((0, C))
@@ -226,8 +289,8 @@ class AdsalaTuner:
             X = build_features(
                 np.repeat(chunk[:, 0], C), np.repeat(chunk[:, 1], C),
                 np.repeat(chunk[:, 2], C),
-                np.tile(self._chips, B), np.tile(self._tiles, B),
-                np.tile(self._parts, B),
+                np.tile(chips, B), np.tile(tiles, B),
+                np.tile(parts, B),
                 None if self._legacy_features
                 else np.repeat(rids[lo:lo + B], C).astype(np.int64))
             out[lo:lo + B] = np.exp(
@@ -241,18 +304,32 @@ class AdsalaTuner:
                                          routines=routine)[0]
 
     def select(self, m: int, k: int, n: int,
-               routine: str = "gemm") -> GemmConfig:
-        """Optimal worker configuration for this routine call (memoised)."""
-        return self.select_many([(m, k, n)], routines=routine)[0]
+               routine: str = "gemm", *,
+               search: bool | int | None = None) -> GemmConfig:
+        """Optimal worker configuration for this routine call (memoised).
+
+        ``search`` opts a cache miss into a dispatch-time beam search
+        over :attr:`space` instead of the fixed-candidate argmin:
+        ``True`` uses the artifact's default width (``search_width``,
+        else 8), an int sets the width, ``False`` forces the fixed path,
+        ``None`` defers to ``search_width``.
+        """
+        return self.select_many([(m, k, n)], routines=routine,
+                                search=search)[0]
 
     def select_many(self, shapes: Iterable[tuple[int, int, int]],
-                    routines=None) -> list[GemmConfig]:
+                    routines=None, *,
+                    search: bool | int | None = None) -> list[GemmConfig]:
         """Optimal configuration per shape, via ONE batched evaluation.
 
         Cache-missed shapes are deduplicated and predicted together (a
         grouped/MoE dispatch with E experts costs one model call, not E);
         hits keep the scalar path's LRU semantics.  ``routines`` follows
-        :meth:`predicted_times_many`.
+        :meth:`predicted_times_many`; ``search`` follows :meth:`select`
+        — the beam path prices whole frontiers through the same model
+        (one batched prediction per level) and can return configs
+        outside the fixed candidate list when the artifact's space is
+        wider.
         """
         shapes = list(shapes)
         names = _normalise_routines(shapes, routines)
@@ -265,13 +342,31 @@ class AdsalaTuner:
             if key not in self._cache and key not in seen:
                 seen.add(key)
                 missing.append(key)
+        eff = search if search is not None else self.search_width
+        if eff is True:
+            eff = self.search_width or 8
         if missing:
             self.stats["evaluations"] += len(missing)
-            times = self.predicted_times_many(
-                [k[1:] for k in missing], routines=[k[0] for k in missing])
-            best = np.argmin(times, axis=1)
-            for key, j, t in zip(missing, best, times):
-                self._cache[key] = (self.candidates[int(j)], t)
+            if eff:
+                res = beam_search(
+                    np.asarray([k[1:] for k in missing], dtype=np.int64),
+                    self.space,
+                    cost_fn=lambda dd, cc, rr: self.predicted_times_many(
+                        [tuple(int(x) for x in d) for d in dd],
+                        routines=rr, candidates=cc),
+                    width=int(eff), routines=[k[0] for k in missing])
+                for key, cfgs in zip(missing, res.configs):
+                    # beam picks are not a row over self.candidates, so
+                    # there is no times vector to memoise (None = lazy
+                    # re-evaluation in select_with_times, like warm start)
+                    self._cache[key] = (cfgs[0], None)
+            else:
+                times = self.predicted_times_many(
+                    [k[1:] for k in missing],
+                    routines=[k[0] for k in missing])
+                best = np.argmin(times, axis=1)
+                for key, j, t in zip(missing, best, times):
+                    self._cache[key] = (self.candidates[int(j)], t)
         out = []
         served: set[Key] = set()
         for key in keys:

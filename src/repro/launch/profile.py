@@ -103,6 +103,18 @@ def main() -> None:
     ap.add_argument("--bias", type=float, default=0.75,
                     help="fraction of the budget biased toward the "
                          "profile's shape regions / routine mix")
+    ap.add_argument("--space", default="default",
+                    choices=["default", "enlarged"],
+                    help="candidate ConfigSpace the install searches: "
+                         "'enlarged' is ~11x the paper grid (3*2^k chip "
+                         "counts, extra tiles, TRSM pipeline depth) and "
+                         "pairs with --timing-budget")
+    ap.add_argument("--timing-budget", type=int, default=None,
+                    help="total timed (dim x config) cells; when set, a "
+                         "cost-model beam search picks which cells to "
+                         "time instead of the dense grid")
+    ap.add_argument("--beam-width", type=int, default=8,
+                    help="beam width of the budgeted install's search")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -116,11 +128,21 @@ def main() -> None:
         return
     # install over every known routine: observed ones get the lion's
     # share via the profile quotas, unobserved ones keep floor coverage
+    space = None
+    if args.space == "enlarged":
+        from repro.core import ConfigSpace
+        space = ConfigSpace.enlarged()
     cfg = InstallConfig(
         n_samples=args.samples, routines=tuple(ROUTINES),
-        workload=profile, workload_bias=args.bias, seed=args.seed)
+        workload=profile, workload_bias=args.bias, seed=args.seed,
+        space=space, timing_budget=args.timing_budget,
+        beam_width=args.beam_width)
+    grid = (f"{args.space} space, "
+            + (f"budget {args.timing_budget} cells, beam "
+               f"{args.beam_width}" if args.timing_budget
+               else "dense grid"))
     print(f"[profile] mix-weighted install: {args.samples} samples, "
-          f"bias {args.bias} -> {args.artifact}")
+          f"bias {args.bias}, {grid} -> {args.artifact}")
     report = install(SimulatedBackend(seed=args.seed), cfg,
                      artifact_dir=args.artifact, verbose=True)
     print(report.table())

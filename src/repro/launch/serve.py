@@ -37,6 +37,10 @@ def main() -> None:
     ap.add_argument("--gen-tokens", type=int, default=16)
     ap.add_argument("--artifact", default=None,
                     help="ADSALA artifact dir (tuner enabled when set)")
+    ap.add_argument("--search-width", type=int, default=None,
+                    help="beam width for dispatch-time config search "
+                         "over the artifact's persisted space (default: "
+                         "fixed-candidate argmin, the paper's policy)")
     ap.add_argument("--profile-out", default=None,
                     help="write the recorded dispatch mix as a "
                          "WorkloadProfile JSON (feed it back into the "
@@ -58,8 +62,12 @@ def main() -> None:
     tuner = None
     if args.artifact and os.path.isdir(args.artifact):
         from repro.core import AdsalaTuner
-        tuner = AdsalaTuner.from_artifact(args.artifact)
-        print(f"[serve] ADSALA tuner loaded from {args.artifact}")
+        tuner = AdsalaTuner.from_artifact(
+            args.artifact, search_width=args.search_width)
+        mode = (f"beam search width {args.search_width}"
+                if args.search_width else "fixed-candidate argmin")
+        print(f"[serve] ADSALA tuner loaded from {args.artifact} "
+              f"({mode})")
 
     cache_len = args.prompt_len + args.gen_tokens
     pctx = make_ctx(None, "prefill", cache_len=cache_len, remat=False,

@@ -99,6 +99,30 @@ def test_candidate_set_structure():
     assert all(0 <= c.tile_id < len(DEFAULT_TILES) for c in cands)
 
 
+def test_chip_doublings_validates_and_truncates():
+    """Regression: candidate_configs(0) used to die inside
+    int(math.log2(max_chips)) with a ValueError mentioning math.log2,
+    and non-powers-of-two were silently truncated (6 -> [1, 2, 4])
+    without the behaviour being stated anywhere.  chip_doublings now
+    owns both: a clear error for invalid input, documented flooring
+    for valid non-powers."""
+    from repro.core.costmodel import chip_doublings
+
+    assert chip_doublings(1) == [1]
+    assert chip_doublings(8) == [1, 2, 4, 8]
+    # documented truncation: every doubling <= max_chips
+    assert chip_doublings(6) == [1, 2, 4]
+    assert chip_doublings(511) == [1, 2, 4, 8, 16, 32, 64, 128, 256]
+    for bad in (0, -3, 2.5, "x", True):
+        with pytest.raises(ValueError, match="max_chips"):
+            chip_doublings(bad)
+    # the candidate enumeration inherits the validation and the
+    # documented truncation instead of a bare math-domain error
+    with pytest.raises(ValueError, match="max_chips"):
+        candidate_configs(0)
+    assert {c.n_chips for c in candidate_configs(6)} == {1, 2, 4}
+
+
 # ---------------------------------------------------------------------------
 # vectorised estimate_batch vs the scalar reference path
 # ---------------------------------------------------------------------------

@@ -200,9 +200,11 @@ def test_artifact_warm_start_round_trip(tiny_artifact):
     n = tiny_artifact.cfg.n_samples
     ws = json.load(
         open(tiny_artifact.dir + "/config.json"))["warm_start"]
-    assert ws["version"] == 2
-    assert len(ws["dims"]) == n and len(ws["best"]) == n
+    assert ws["version"] == 3
+    assert len(ws["dims"]) == n and len(ws["configs"]) == n
     assert set(ws["routines"]) == {"gemm", "syrk", "trsm"}
+    assert all({"n_chips", "partition", "tile_id"} <= set(c)
+               for c in ws["configs"])
 
     tuner = AdsalaTuner.from_artifact(tiny_artifact.dir)
     assert len(tuner._cache) == n
@@ -226,9 +228,11 @@ def test_artifact_v1_warm_start_loads_as_gemm(tiny_artifact, tmp_path):
     shutil.copytree(tiny_artifact.dir, legacy)
     cfg_path = legacy / "config.json"
     config = json.load(open(cfg_path))
+    # v1 blocks persisted argmin indices into the candidate list
+    best = [config["candidates"].index(c)
+            for c in config["warm_start"]["configs"]]
     config["warm_start"] = {
-        "dims": config["warm_start"]["dims"],
-        "best": config["warm_start"]["best"]}
+        "dims": config["warm_start"]["dims"], "best": best}
     json.dump(config, open(cfg_path, "w"))
 
     tuner = AdsalaTuner.from_artifact(str(legacy))
@@ -269,10 +273,36 @@ def test_warm_start_entries_outside_installed_routines_dropped(
         tuner.select(m, k, n, "syrk")
 
 
-def test_warm_start_out_of_range_best_index_dropped(tiny_artifact,
-                                                    tmp_path):
-    """Argmin indices outside the candidate list (candidate set from a
-    different install version) are dropped, not IndexError'd."""
+def test_warm_start_out_of_space_config_dropped(tiny_artifact, tmp_path):
+    """v3 blocks carry explicit config dicts; entries outside the
+    persisted ConfigSpace (hand-edited / different install version) or
+    malformed are dropped, not crashed on."""
+    import json
+    import shutil
+    broken = tmp_path / "bad_config"
+    shutil.copytree(tiny_artifact.dir, broken)
+    cfg_path = broken / "config.json"
+    config = json.load(open(cfg_path))
+    # 6 chips is not a power-of-two doubling -> outside the space
+    config["warm_start"]["configs"][0] = {
+        "n_chips": 6, "partition": "2D", "tile_id": 3}
+    config["warm_start"]["configs"][1] = {"partition": "M"}  # malformed
+    json.dump(config, open(cfg_path, "w"))
+
+    with pytest.warns(UserWarning, match="dropped 2/"):
+        tuner = AdsalaTuner.from_artifact(str(broken))
+    assert len(tuner._cache) == tiny_artifact.cfg.n_samples - 2
+    # the dropped shapes fall back to a cold evaluation, not a crash
+    ws = config["warm_start"]
+    cfg = tuner.select(*ws["dims"][0], ws["routines"][0])
+    assert isinstance(cfg, GemmConfig)
+    assert tuner.stats["evaluations"] == 1
+
+
+def test_warm_start_v2_out_of_range_best_index_dropped(tiny_artifact,
+                                                       tmp_path):
+    """v2 blocks (argmin indices) still load; indices outside the
+    candidate list are dropped, not IndexError'd."""
     import json
     import shutil
     broken = tmp_path / "bad_index"
@@ -280,14 +310,18 @@ def test_warm_start_out_of_range_best_index_dropped(tiny_artifact,
     cfg_path = broken / "config.json"
     config = json.load(open(cfg_path))
     n_cands = len(config["candidates"])
-    config["warm_start"]["best"][0] = n_cands + 7
-    config["warm_start"]["best"][1] = -1
+    best = [config["candidates"].index(c)
+            for c in config["warm_start"]["configs"]]
+    best[0] = n_cands + 7
+    best[1] = -1
+    config["warm_start"] = {
+        "version": 2, "dims": config["warm_start"]["dims"],
+        "routines": config["warm_start"]["routines"], "best": best}
     json.dump(config, open(cfg_path, "w"))
 
     with pytest.warns(UserWarning, match="dropped 2/"):
         tuner = AdsalaTuner.from_artifact(str(broken))
     assert len(tuner._cache) == tiny_artifact.cfg.n_samples - 2
-    # the dropped shapes fall back to a cold evaluation, not a crash
     ws = config["warm_start"]
     cfg = tuner.select(*ws["dims"][0], ws["routines"][0])
     assert isinstance(cfg, GemmConfig)
@@ -306,8 +340,10 @@ def test_warm_start_v1_block_with_unknown_routine_key(tiny_artifact,
     config = json.load(open(cfg_path))
     config["install"]["routines"] = ["gemm"]
     dims = config["warm_start"]["dims"]
+    best = [config["candidates"].index(c)
+            for c in config["warm_start"]["configs"]]
     config["warm_start"] = {
-        "dims": dims, "best": config["warm_start"]["best"],
+        "dims": dims, "best": best,
         "routines": ["gemm"] * (len(dims) - 1) + ["trsm"]}
     json.dump(config, open(cfg_path, "w"))
 
