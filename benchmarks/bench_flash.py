@@ -1,0 +1,123 @@
+"""Tuned triangular flash attention: dense vs block-sparse tri grid.
+
+Reports, as ``name,us_per_call,derived`` CSV lines, the three columns
+of the README "Tuned flash attention" table at Sq = Skv = 2k / 8k / 32k
+(2k only under ``--smoke``):
+
+  * blocks launched per batch-head (the sequential grid steps — the
+    dense grid launches every tile and streams its K/V blocks even when
+    ``pl.when`` predicates the masked MXU work away; the tri map never
+    launches them);
+  * tile FLOPs streamed through the pipeline (launched tiles x
+    4*bq*bkv*Dh, the QK^T + AV MXU volume a launched tile occupies);
+  * measured wall clock of the blocked CPU attention proxy
+    (MeasuredCPUBackend routine="attn") and the analytic TPU v5e priced
+    time, dense vs tri configs.
+
+``--smoke`` (the CI flash job) also gates the PR's acceptance criteria:
+at Sq = Skv >= 2048 the triangular grid must execute <= 60% of the
+dense grid's steps, and the two kernels' outputs must be bitwise equal
+in interpret mode.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from repro.core.costmodel import (
+    FLASH_BLOCKS,
+    GemmConfig,
+    estimate_routine_time,
+)
+from repro.core.timing import MeasuredCPUBackend
+from repro.kernels.flash_attention import (
+    flash_attention_pallas,
+    flash_grid_counts,
+)
+
+D_HEAD = 64
+
+
+def _cfg(bq: int, bkv: int, grid: str) -> GemmConfig:
+    return GemmConfig(1, "M", 3, flash_block_id=FLASH_BLOCKS.index(
+        (bq, bkv)), flash_grid=grid)
+
+
+def _best_of(fn, reps: int = 3) -> float:
+    fn()  # warm (operand buffers, BLAS threads)
+    return min(fn() for _ in range(reps))
+
+
+def run(smoke: bool = False) -> list[str]:
+    lines = []
+    seqs = (2048,) if smoke else (2048, 8192, 32768)
+    for s in seqs:
+        # 256x256 keeps the 2k grid deep enough (g=8) for the triangle
+        # to pay; past 2k the historical 512x512 default is fine (g>=16)
+        bq, bkv = (256, 256) if s <= 2048 else (512, 512)
+        tri, dense = flash_grid_counts(s, s, bq, bkv, causal=True)
+        ratio = tri / dense
+        lines.append(f"flash_blocks_dense_{s},{dense},tiles")
+        lines.append(f"flash_blocks_tri_{s},{tri},"
+                     f"ratio={ratio:.3f}_bq{bq}_bkv{bkv}")
+        tile_flops = 4 * bq * bkv * D_HEAD
+        lines.append(f"flash_tile_gflops_dense_{s},"
+                     f"{dense * tile_flops / 1e9:.2f},GF")
+        lines.append(f"flash_tile_gflops_tri_{s},"
+                     f"{tri * tile_flops / 1e9:.2f},GF")
+        if s >= 2048:
+            assert ratio <= 0.60, (
+                f"triangular grid ran {ratio:.1%} of dense steps at "
+                f"S={s} (acceptance bound: 60%)")
+        # analytic TPU v5e pricing of the same two configs
+        for grid in ("dense", "tri"):
+            t = estimate_routine_time(s, D_HEAD, s, _cfg(bq, bkv, grid),
+                                      routine="attn").total_s
+            lines.append(f"flash_priced_{grid}_{s},{t * 1e6:.1f},"
+                         "tpu_v5e_model_us")
+        # measured wall clock of the blocked CPU attention proxy; the
+        # 32k row is ~2x 137 GF of numpy GEMM — full mode only
+        if not smoke or s <= 2048:
+            be = MeasuredCPUBackend(max_dim=s)
+            for grid in ("dense", "tri"):
+                cfg_ = _cfg(bq, bkv, grid)
+                t = _best_of(lambda: be.time_routine(
+                    s, D_HEAD, s, cfg_, routine="attn"),
+                    reps=3 if s <= 2048 else 1)
+                lines.append(f"flash_cpu_{grid}_{s},{t * 1e6:.0f},"
+                             "measured_us")
+
+    # interpret-mode kernel parity: the tri grid must be bitwise equal
+    # to the dense grid (identical block arithmetic, fewer launches)
+    s0, b0 = (256, 64) if smoke else (512, 128)
+    rng = np.random.default_rng(0)
+    q, k, v = (rng.standard_normal((2, s0, D_HEAD)).astype(np.float32)
+               for _ in range(3))
+    t0 = time.perf_counter()
+    out_d = np.asarray(flash_attention_pallas(
+        q, k, v, bq=b0, bkv=b0, causal=True, interpret=True,
+        grid="dense"))
+    t_dense = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    out_t = np.asarray(flash_attention_pallas(
+        q, k, v, bq=b0, bkv=b0, causal=True, interpret=True, grid="tri"))
+    t_tri = time.perf_counter() - t0
+    np.testing.assert_array_equal(out_t, out_d)
+    lines.append(f"flash_interpret_dense_{s0},{t_dense * 1e6:.0f},"
+                 "trace+run_us")
+    lines.append(f"flash_interpret_tri_{s0},{t_tri * 1e6:.0f},"
+                 "bitwise_equal")
+    return lines
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv
+    for line in run(smoke=smoke):
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

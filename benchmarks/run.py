@@ -1,12 +1,12 @@
 """Benchmark harness: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV and writes a machine-readable
-``BENCH_6.json`` (per-suite rows + medians, install wall-clock and the
+``BENCH_7.json`` (per-suite rows + medians, install wall-clock and the
 selected model's warm-tuner speedups) so the perf trajectory is tracked
 across PRs instead of scraped from logs.  Modules share a cached ADSALA
 install run per platform (benchmarks/common.py); ADSALA_BENCH_FULL=1
 raises the install budget to paper scale, ADSALA_BENCH_JSON overrides
-the JSON output path (default ``results/BENCH_6.json``).
+the JSON output path (default ``results/BENCH_7.json``).
 """
 
 from __future__ import annotations
@@ -78,6 +78,7 @@ def main() -> None:
         bench_affinity,
         bench_breakdown,
         bench_dispatch_overhead,
+        bench_flash,
         bench_gflops_curve,
         bench_heatmap,
         bench_histogram,
@@ -97,6 +98,7 @@ def main() -> None:
         ("search_harness", bench_search.run),
         ("workload_install", bench_workload_install.run),
         ("dispatch_overhead", bench_dispatch_overhead.run),
+        ("flash_attention", bench_flash.run),
         ("spec_derivation", bench_spec_derivation.run),
         ("fig1_fig8_histogram", bench_histogram.run),
         ("fig9_heatmap", bench_heatmap.run),
@@ -161,7 +163,7 @@ def main() -> None:
         failures += 1
         traceback.print_exc()
     out_path = os.environ.get("ADSALA_BENCH_JSON",
-                              os.path.join("results", "BENCH_6.json"))
+                              os.path.join("results", "BENCH_7.json"))
     os.makedirs(os.path.dirname(os.path.abspath(out_path)), exist_ok=True)
     with open(out_path, "w") as f:
         json.dump(bench_json, f, indent=1)

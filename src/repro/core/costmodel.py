@@ -25,6 +25,19 @@ triple:
          operand reads, and a *sequential dependency* along M — row
          panels retire in order, so at most TRSM_SEQ_CHIPS chips help on
          the M axis and every M-panel costs a dependent kernel launch.
+  attn — causal flash attention on the (Sq, Dh, Skv) triple (m = query
+         length, k = head dim, n = KV length; batch x heads is dispatch
+         multiplicity, not part of the priced shape).  Score + AV FLOPs
+         (4*m*k*n) at the causal triangular fraction of the flash tile
+         grid; online softmax means Q and O stream exactly once and no
+         (Sq, Skv) score matrix ever touches HBM.  The per-config flash
+         knobs (``flash_block_id`` -> a (bq, bkv) FLASH_BLOCKS preset,
+         ``flash_grid`` dense/tri) decide whether K/V blocks above the
+         diagonal are still *streamed* (dense: skipped on the MXU via
+         pl.when but every block is copied and every grid step launches)
+         or never launched at all (tri: the block-sparse triangular
+         grid) — that memory/launch gap is exactly what the tuner
+         learns to price.
 
 The same formulas (without noise) are reused by the roofline analysis —
 keeping the tuner's world model and the §Roofline arithmetic consistent.
@@ -49,11 +62,14 @@ __all__ = [
     "estimate_routine_time", "estimate_batch_terms", "estimate_batch",
     "DEFAULT_TILES", "EXTENDED_TILES", "PARTITIONS",
     "ROUTINES", "DEFAULT_ROUTINE", "TRSM_SEQ_CHIPS",
+    "FLASH_BLOCKS", "FLASH_GRIDS",
     "routine_ids",
 ]
 
-#: BLAS-3 routines the stack understands; index = routine id feature.
-ROUTINES: tuple[str, ...] = ("gemm", "syrk", "trsm")
+#: Routines the stack understands; index = routine id feature.  The
+#: first three are the BLAS-3 set (arXiv 2406.19621); ``attn`` is tuned
+#: flash attention on the (Sq, Dh, Skv) triple.
+ROUTINES: tuple[str, ...] = ("gemm", "syrk", "trsm", "attn")
 
 #: The explicit default/fallback routine.  Call sites that don't tag a
 #: routine dispatch as this, and tuners whose artifact lacks signal for
@@ -68,6 +84,24 @@ DEFAULT_ROUTINE: str = ROUTINES[0]
 #: this constant is the historical default every pre-search config
 #: carries.
 TRSM_SEQ_CHIPS = 4
+
+#: Flash-attention (bq, bkv) block presets; index = the
+#: ``GemmConfig.flash_block_id`` knob.  Id 0 is the historical
+#: hardcoded kernel block, so default-constructed configs (and every
+#: persisted pre-flash artifact) keep meaning exactly what they meant.
+FLASH_BLOCKS: tuple[tuple[int, int], ...] = (
+    (512, 512),
+    (256, 512),
+    (512, 256),
+    (256, 256),
+    (1024, 512),
+    (128, 512),
+)
+
+#: Flash KV-grid kinds: ``dense`` launches the full (gq x gkv) grid and
+#: skips masked tiles on the MXU only; ``tri`` is the block-sparse
+#: triangular grid that never launches (or streams) a fully-masked tile.
+FLASH_GRIDS: tuple[str, ...] = ("dense", "tri")
 
 
 def routine_ids(routines, n: int) -> np.ndarray:
@@ -115,6 +149,10 @@ class TPUSpec:
     launch_overhead_s: float = 2e-6       # per kernel launch
     collective_latency_s: float = 0.2e-6  # ICI per-hop latency
     collective_dispatch_s: float = 5e-6   # software cost per collective
+    #: per-grid-step overhead of the flash attention pipeline (DMA issue
+    #: + sequential-axis bookkeeping); what the triangular grid saves on
+    #: top of K/V traffic by never launching masked tiles
+    flash_step_s: float = 0.2e-6
     max_chips: int = 512
 
     @property
@@ -163,22 +201,39 @@ class GemmConfig:
                      Ignored by gemm/syrk.  Defaults to the historical
                      constant so three-argument construction (and every
                      persisted artifact) keeps its exact old meaning.
+    flash_block_id — index into FLASH_BLOCKS for the attention kernel's
+                     (bq, bkv) split.  Ignored by gemm/syrk/trsm.
+    flash_grid     — flash KV-grid kind, "dense" or "tri" (block-sparse
+                     triangular).  Both flash knobs default to the
+                     pre-flash kernel behaviour (512x512 dense) so every
+                     persisted artifact round-trips unchanged.
     """
     n_chips: int
     partition: str
     tile_id: int
     trsm_seq_chips: int = TRSM_SEQ_CHIPS
+    flash_block_id: int = 0
+    flash_grid: str = "dense"
 
     @property
     def tile(self) -> tuple[int, int, int]:
         return EXTENDED_TILES[self.tile_id]
 
     @property
+    def flash_block(self) -> tuple[int, int]:
+        """The attention kernel's (bq, bkv) block split."""
+        return FLASH_BLOCKS[self.flash_block_id]
+
+    @property
     def config_id(self) -> int:
-        """Stable integer id (used for memoisation / logging)."""
+        """Stable integer id (used for memoisation / logging).  Flash
+        knobs at their defaults contribute 0, preserving every
+        historical id."""
         return ((self.tile_id * len(_PARTITIONS)
                  + _PARTITIONS.index(self.partition)) * 64
-                + self.trsm_seq_chips) * 1024 + self.n_chips
+                + self.trsm_seq_chips) * 1024 + self.n_chips \
+            + ((self.flash_block_id * len(FLASH_GRIDS)
+                + FLASH_GRIDS.index(self.flash_grid)) << 22)
 
 
 @dataclasses.dataclass
@@ -335,8 +390,14 @@ def estimate_routine_time(m: int, k: int, n: int, cfg: GemmConfig,
     """
     routine = ROUTINES[_routine_id(routine)]
     lm, lk, ln = _local_shape(m, k, n, cfg, routine)
-    bm, bk, bn = cfg.tile
-    bm, bk, bn = min(bm, _pad(lm)), min(bk, _pad(lk)), min(bn, _pad(ln))
+    if routine == "attn":
+        # flash attention blocks along (Sq, Skv); the head dim (k) is
+        # resident in VMEM, never tiled
+        fbq, fbkv = cfg.flash_block
+        bm, bk, bn = min(fbq, _pad(lm)), _pad(lk), min(fbkv, _pad(ln))
+    else:
+        bm, bk, bn = cfg.tile
+        bm, bk, bn = min(bm, _pad(lm)), min(bk, _pad(lk)), min(bn, _pad(ln))
 
     gm, gk, gn = _ceil_div(lm, bm), _ceil_div(lk, bk), _ceil_div(ln, bn)
 
@@ -345,6 +406,12 @@ def estimate_routine_time(m: int, k: int, n: int, cfg: GemmConfig,
     # for square grids (g(g+1)/2 tiles); <= 1 always, -> 1/2 as the grid
     # grows, == 1 for a single tile.
     tri_frac = 0.5 * (1.0 + 1.0 / max(gm, gn))
+
+    # flash grid fraction: share of the (gm x gn) KV grid the kernel
+    # actually *launches* — the dense grid streams every block and skips
+    # masked MXU work via pl.when; the triangular grid never launches
+    # above-diagonal tiles, so K/V traffic and step overhead shrink too
+    grid_frac = tri_frac if cfg.flash_grid != "dense" else 1.0
 
     # ---- compute: padded-tile FLOPs at MXU efficiency --------------------
     mxu = spec.mxu_dim
@@ -358,6 +425,10 @@ def estimate_routine_time(m: int, k: int, n: int, cfg: GemmConfig,
         flops = flops * tri_frac
     elif routine == "trsm":       # substitution: half the multiply-adds
         flops = flops * 0.5
+    elif routine == "attn":       # score + AV matmuls, causal triangle
+        # (MXU work is triangular on *both* grids — dense skips masked
+        # tiles via pl.when; only traffic/launches differ)
+        flops = flops * 2.0 * tri_frac
     compute_s = flops / (spec.peak_flops * mxu_eff)
 
     # ---- memory: blocked HBM traffic -------------------------------------
@@ -368,6 +439,14 @@ def estimate_routine_time(m: int, k: int, n: int, cfg: GemmConfig,
         bytes_c = bytes_c * tri_frac
     elif routine == "trsm":       # triangular operand panel reads
         bytes_a = bytes_a * 0.5
+    elif routine == "attn":
+        # online softmax: Q streams exactly once (resident across its KV
+        # loop), K *and* V stream once per launched Q row (grid_frac of
+        # the dense re-read), and the output O[m, k] is written once —
+        # no (Sq, Skv) score matrix ever touches HBM
+        bytes_a = lm * lk * dtype_bytes
+        bytes_b = lk * ln * gm * (2 * dtype_bytes) * grid_frac
+        bytes_c = lm * lk * dtype_bytes
     # VMEM overflow cliff: working set beyond VMEM spills accumulators
     working = (bm * bk + bk * bn + bm * bn) * dtype_bytes * 2  # dbl buffer
     spill = 1.0 if working <= spec.vmem_bytes else 4.0
@@ -385,6 +464,10 @@ def estimate_routine_time(m: int, k: int, n: int, cfg: GemmConfig,
     if routine == "trsm":
         # dependency chain: every global M panel is a dependent launch
         launch_s = launch_s * _ceil_div(m, bm)
+    elif routine == "attn":
+        # per-grid-step pipeline overhead: the triangular grid pays it
+        # only for launched (below-diagonal) tiles
+        launch_s = launch_s + spec.flash_step_s * (gm * gn * grid_frac)
 
     tb = TimeBreakdown(compute_s, memory_s, collective_s, launch_s)
     if rng is not None:
@@ -422,6 +505,7 @@ class BatchBreakdown:
 def config_arrays(cfgs: list[GemmConfig]) -> dict[str, np.ndarray]:
     """Columnar view of a candidate set, shape (C,) per field."""
     tiles = np.asarray([c.tile for c in cfgs], dtype=np.int64)
+    fblocks = np.asarray([c.flash_block for c in cfgs], dtype=np.int64)
     return {
         "n_chips": np.asarray([c.n_chips for c in cfgs], dtype=np.int64),
         "partition": np.asarray(
@@ -430,6 +514,11 @@ def config_arrays(cfgs: list[GemmConfig]) -> dict[str, np.ndarray]:
         "trsm_seq_chips": np.asarray(
             [c.trsm_seq_chips for c in cfgs], dtype=np.int64),
         "bm": tiles[:, 0], "bk": tiles[:, 1], "bn": tiles[:, 2],
+        "flash_block_id": np.asarray(
+            [c.flash_block_id for c in cfgs], dtype=np.int64),
+        "flash_bq": fblocks[:, 0], "flash_bkv": fblocks[:, 1],
+        "flash_tri": np.asarray(
+            [c.flash_grid != "dense" for c in cfgs], dtype=np.int64),
     }
 
 
@@ -476,8 +565,10 @@ def estimate_batch_terms(dims: np.ndarray, cfgs: list[GemmConfig],
     rids = routine_ids(routines, len(dims))
     is_syrk_d = (rids == ROUTINES.index("syrk"))[:, None]     # (D, 1)
     is_trsm_d = (rids == ROUTINES.index("trsm"))[:, None]
+    is_attn_d = (rids == ROUTINES.index("attn"))[:, None]
     any_syrk = bool(is_syrk_d.any())
     any_trsm = bool(is_trsm_d.any())
+    any_attn = bool(is_attn_d.any())
     ca = config_arrays(cfgs)
 
     # Local shapes, collectives and launch cost are tile-independent, so
@@ -525,12 +616,23 @@ def estimate_batch_terms(dims: np.ndarray, cfgs: list[GemmConfig],
     bm = np.minimum(ca["bm"][None, :], pad_m[:, inv])
     bk = np.minimum(ca["bk"][None, :], pad_k[:, inv])
     bn = np.minimum(ca["bn"][None, :], pad_n[:, inv])
+    if any_attn:
+        # attn rows block along (Sq, Skv) via the config's flash preset;
+        # the head dim is VMEM-resident, never tiled (see scalar path)
+        bm = np.where(is_attn_d,
+                      np.minimum(ca["flash_bq"][None, :], pad_m[:, inv]), bm)
+        bk = np.where(is_attn_d, pad_k[:, inv], bk)
+        bn = np.where(is_attn_d,
+                      np.minimum(ca["flash_bkv"][None, :], pad_n[:, inv]), bn)
     gm = _ceil_div_f(lm, bm)
     gk = _ceil_div_f(lk, bk)
     gn = _ceil_div_f(ln, bn)
 
     # triangular fraction of the local output tile grid (see scalar path)
     tri_frac = 0.5 * (1.0 + 1.0 / np.maximum(gm, gn))
+    if any_attn:
+        # launched share of the flash KV grid (1.0 on the dense grid)
+        grid_frac = np.where(ca["flash_tri"][None, :] == 1, tri_frac, 1.0)
 
     # ---- compute: padded-tile FLOPs at wave-quantised MXU efficiency -----
     mxu = float(spec.mxu_dim)
@@ -543,6 +645,8 @@ def estimate_batch_terms(dims: np.ndarray, cfgs: list[GemmConfig],
         flops = np.where(is_syrk_d, flops * tri_frac, flops)
     if any_trsm:
         flops = np.where(is_trsm_d, flops * 0.5, flops)
+    if any_attn:
+        flops = np.where(is_attn_d, flops * 2.0 * tri_frac, flops)
     compute_s = flops / (spec.peak_flops * mxu_eff)
 
     # ---- memory: blocked HBM traffic with VMEM-spill cliff ---------------
@@ -553,6 +657,12 @@ def estimate_batch_terms(dims: np.ndarray, cfgs: list[GemmConfig],
         bytes_c = np.where(is_syrk_d, bytes_c * tri_frac, bytes_c)
     if any_trsm:
         bytes_a = np.where(is_trsm_d, bytes_a * 0.5, bytes_a)
+    if any_attn:                  # online softmax (see scalar path)
+        bytes_a = np.where(is_attn_d, lm * lk * dtype_bytes, bytes_a)
+        bytes_b = np.where(is_attn_d,
+                           lk * ln * gm * (2 * dtype_bytes) * grid_frac,
+                           bytes_b)
+        bytes_c = np.where(is_attn_d, lm * lk * dtype_bytes, bytes_c)
     working = (bm * bk + bk * bn + bm * bn) * dtype_bytes * 2
     spill = np.where(working <= spec.vmem_bytes, 1.0, 4.0)
     memory_s = spill * (bytes_a + bytes_b + bytes_c) / spec.hbm_bw
@@ -584,6 +694,10 @@ def estimate_batch_terms(dims: np.ndarray, cfgs: list[GemmConfig],
     if any_trsm:                  # dependent launch per global M panel
         launch_s = np.where(is_trsm_d, launch_s * _ceil_div_f(m, bm),
                             launch_s)
+    if any_attn:                  # per-grid-step overhead, launched tiles
+        launch_s = np.where(
+            is_attn_d,
+            launch_s + spec.flash_step_s * (gm * gn * grid_frac), launch_s)
 
     if rng is not None:
         jitter = np.exp(rng.normal(0.0, 0.05, size=compute_s.shape))

@@ -117,11 +117,15 @@ class InstallConfig:
         return self.mem_limit_mb * 2**20
 
     def resolved_space(self):
-        """The ConfigSpace this install searches/enumerates."""
+        """The ConfigSpace this install searches/enumerates.  Installs
+        covering ``attn`` get the flash axes appended (idempotent) —
+        the flash knobs only exist to be timed for attention rows."""
         from repro.core.search.space import ConfigSpace  # local: no cycle
-        if self.space is not None:
-            return self.space
-        return ConfigSpace.default(self.max_chips, tiles=self.tile_ids)
+        space = self.space if self.space is not None \
+            else ConfigSpace.default(self.max_chips, tiles=self.tile_ids)
+        if "attn" in self.routines:
+            space = space.with_flash()
+        return space
 
 
 def default_config(**overrides: Any) -> InstallConfig:
@@ -129,18 +133,25 @@ def default_config(**overrides: Any) -> InstallConfig:
 
 
 def _config_dict(c: GemmConfig) -> dict:
-    """JSON form of a config; the TRSM knob only appears when it left
-    the historical default, so pre-search readers keep parsing."""
+    """JSON form of a config; the TRSM and flash knobs only appear when
+    they left their historical defaults, so pre-search (and pre-flash)
+    readers keep parsing."""
     d = {"n_chips": c.n_chips, "partition": c.partition,
          "tile_id": c.tile_id}
     if c.trsm_seq_chips != costmodel.TRSM_SEQ_CHIPS:
         d["trsm_seq_chips"] = c.trsm_seq_chips
+    if c.flash_block_id != 0:
+        d["flash_block_id"] = c.flash_block_id
+    if c.flash_grid != "dense":
+        d["flash_grid"] = c.flash_grid
     return d
 
 
 def _config_from_dict(d: dict) -> GemmConfig:
     return GemmConfig(d["n_chips"], d["partition"], d["tile_id"],
-                      d.get("trsm_seq_chips", costmodel.TRSM_SEQ_CHIPS))
+                      d.get("trsm_seq_chips", costmodel.TRSM_SEQ_CHIPS),
+                      d.get("flash_block_id", 0),
+                      d.get("flash_grid", "dense"))
 
 
 @dataclasses.dataclass
@@ -188,26 +199,55 @@ class GatheredData:
                 ) -> tuple[np.ndarray, np.ndarray]:
         """(X_features, y_log_time) long format, optionally subsampling
         configs per dim (the paper separates runs per thread count).
-        Only timed cells become rows (budgeted grids are sparse)."""
+        Only timed cells become rows (budgeted grids are sparse).
+
+        Flash knobs are inert off attn rows, so on a flash-extended grid
+        a gemm/syrk/trsm dim sees up to ``len(FLASH_BLOCKS) * 2``
+        feature-identical columns per effective config; sampling those
+        duplicates would eat the per-dim quota without adding training
+        diversity.  Non-attn rows therefore subsample from one
+        representative column per (n_chips, partition, tile_id,
+        trsm_seq_chips) — the flash-default one when the grid carries it.
+        """
         rng = np.random.default_rng(seed)
         D, C = self.times.shape
         rids = self.routine_ids()
+        attn_id = ROUTINES.index("attn")
         timed = self.timed_mask()
+        # one representative column per non-flash config, defaults first
+        rep = np.zeros(C, dtype=bool)
+        seen_base: set[tuple] = set()
+        for j in sorted(range(C),
+                        key=lambda j: (self.cfgs[j].flash_block_id != 0
+                                       or self.cfgs[j].flash_grid
+                                       != "dense")):
+            c = self.cfgs[j]
+            base = (c.n_chips, c.partition, c.tile_id, c.trsm_seq_chips)
+            if base not in seen_base:
+                seen_base.add(base)
+                rep[j] = True
         rows_X, rows_y = [], []
         for i in range(D):
             pool = np.flatnonzero(timed[i])
+            if rids[i] != attn_id:
+                dedup = pool[rep[pool]]
+                if len(dedup):
+                    pool = dedup
             js = (pool if per_dim is None or per_dim >= len(pool)
                   else rng.choice(pool, size=per_dim, replace=False))
             m, k, n = self.dims[i]
             for j in js:
                 cfg = self.cfgs[j]
                 rows_X.append((m, k, n, cfg.n_chips, cfg.tile_id,
-                               _PARTITIONS.index(cfg.partition), rids[i]))
+                               _PARTITIONS.index(cfg.partition), rids[i],
+                               cfg.flash_block[0], cfg.flash_block[1],
+                               float(cfg.flash_grid != "dense")))
                 rows_y.append(self.times[i, j])
         raw = np.asarray(rows_X, dtype=np.float64)
         X = build_features(raw[:, 0], raw[:, 1], raw[:, 2], raw[:, 3],
                            raw[:, 4], raw[:, 5],
-                           raw[:, 6].astype(np.int64))
+                           raw[:, 6].astype(np.int64),
+                           flash=(raw[:, 7], raw[:, 8], raw[:, 9]))
         y = np.log(np.maximum(np.asarray(rows_y), 1e-12))
         return X, y
 
@@ -228,6 +268,10 @@ class GatheredData:
                 [_PARTITIONS.index(c.partition) for c in self.cfgs]),
             cfg_seq=np.asarray(
                 [c.trsm_seq_chips for c in self.cfgs]),
+            cfg_fblock=np.asarray(
+                [c.flash_block_id for c in self.cfgs]),
+            cfg_ftri=np.asarray(
+                [int(c.flash_grid != "dense") for c in self.cfgs]),
             **extra)
 
     @classmethod
@@ -244,12 +288,18 @@ class GatheredData:
         retrained from the file — raise instead.
         """
         z = np.load(path)
+        n_cfg = len(z["cfg_chips"])
         seqs = (z["cfg_seq"] if "cfg_seq" in z.files
-                else np.full(len(z["cfg_chips"]),
-                             costmodel.TRSM_SEQ_CHIPS))
-        cfgs = [GemmConfig(int(c), _PARTITIONS[int(p)], int(t), int(s))
-                for c, t, p, s in zip(z["cfg_chips"], z["cfg_tile"],
-                                      z["cfg_part"], seqs)]
+                else np.full(n_cfg, costmodel.TRSM_SEQ_CHIPS))
+        fblocks = (z["cfg_fblock"] if "cfg_fblock" in z.files
+                   else np.zeros(n_cfg, dtype=np.int64))
+        ftris = (z["cfg_ftri"] if "cfg_ftri" in z.files
+                 else np.zeros(n_cfg, dtype=np.int64))
+        cfgs = [GemmConfig(int(c), _PARTITIONS[int(p)], int(t), int(s),
+                           int(fb), "tri" if ft else "dense")
+                for c, t, p, s, fb, ft in zip(
+                    z["cfg_chips"], z["cfg_tile"], z["cfg_part"], seqs,
+                    fblocks, ftris)]
         routines = (z["routines"].astype(np.int64)
                     if "routines" in z.files else None)
         if isinstance(config, str):
@@ -468,7 +518,10 @@ def _measure_eval_time(model: Any, pipe: PreprocessPipeline,
         np.full(n_candidates, 512.0),
         np.maximum(1, np.arange(n_candidates) % 9),
         np.arange(n_candidates) % 8, np.arange(n_candidates) % 4,
-        np.arange(n_candidates) % len(ROUTINES))
+        np.arange(n_candidates) % len(ROUTINES),
+        flash=(np.full(n_candidates, 512.0),
+               np.full(n_candidates, 512.0),
+               np.arange(n_candidates) % 2))
     # warmup
     model.predict(pipe.transform(Xq))
     t0 = time.perf_counter()

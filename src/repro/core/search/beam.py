@@ -38,7 +38,8 @@ __all__ = ["BeamResult", "beam_search", "exhaustive_best"]
 #: branches priced at the canonical chip default) before the wide chip
 #: axis, then tiles, then routine knobs.  Axes a space lacks are skipped;
 #: axes not named here run afterwards in space order.
-DEFAULT_ORDER = ("partition", "n_chips", "tile_id", "trsm_seq_chips")
+DEFAULT_ORDER = ("partition", "n_chips", "tile_id", "trsm_seq_chips",
+                 "flash_block_id", "flash_grid")
 
 
 @dataclasses.dataclass

@@ -36,6 +36,8 @@ from typing import Iterable
 from repro.core.costmodel import (
     DEFAULT_TILES,
     EXTENDED_TILES,
+    FLASH_BLOCKS,
+    FLASH_GRIDS,
     PARTITIONS,
     TRSM_SEQ_CHIPS,
     GemmConfig,
@@ -46,8 +48,10 @@ __all__ = ["Axis", "ConfigSpace", "Gate"]
 
 #: ConfigSpace axis name -> GemmConfig field, in canonical (enumeration)
 #: order.  Axes absent from a space pin their field to the dataclass
-#: default (``trsm_seq_chips`` -> TRSM_SEQ_CHIPS).
-_FIELDS = ("n_chips", "partition", "tile_id", "trsm_seq_chips")
+#: default (``trsm_seq_chips`` -> TRSM_SEQ_CHIPS, flash knobs -> the
+#: historical dense 512x512 kernel).
+_FIELDS = ("n_chips", "partition", "tile_id", "trsm_seq_chips",
+           "flash_block_id", "flash_grid")
 _REQUIRED = ("n_chips", "partition", "tile_id")
 
 
@@ -71,6 +75,13 @@ class Gate:
       ``min_local`` — dims-aware: the guarded partition must keep at
                       least ``param`` elements per chip along every
                       sharded extent.  A no-op when dims are unknown.
+      ``flash_tri_rows`` — dims-aware: the triangular flash grid is only
+                      admissible when the Q axis (m = Sq) spans at least
+                      ``param`` rows of the config's ``flash_bq`` block —
+                      on a single-row grid tri degenerates to dense, so
+                      enumerating both would double the space for
+                      nothing.  Defers while ``flash_block_id`` is
+                      unassigned or dims are unknown.
 
     Gates referencing a not-yet-assigned axis *defer* (admit) — partial
     states stay expandable in any axis order; the predicate re-fires
@@ -84,6 +95,11 @@ class Gate:
         if self.kind == "min_chips":
             c = partial.get("n_chips")
             return c is None or c >= self.param
+        if self.kind == "flash_tri_rows":
+            b = partial.get("flash_block_id")
+            if dims is None or b is None:
+                return True
+            return _ceil_div(int(dims[0]), FLASH_BLOCKS[b][0]) >= self.param
         if self.kind == "min_local":
             c = partial.get("n_chips")
             if dims is None or c is None:
@@ -155,7 +171,9 @@ class ConfigSpace:
     def _to_config(self, partial: dict) -> GemmConfig:
         return GemmConfig(partial["n_chips"], partial["partition"],
                           partial["tile_id"],
-                          partial.get("trsm_seq_chips", TRSM_SEQ_CHIPS))
+                          partial.get("trsm_seq_chips", TRSM_SEQ_CHIPS),
+                          partial.get("flash_block_id", 0),
+                          partial.get("flash_grid", "dense"))
 
     def enumerate(self, dims=None) -> list[GemmConfig]:
         """Every admissible config, in canonical axis order (the old
@@ -231,10 +249,16 @@ class ConfigSpace:
         an axis must sit at their dataclass default."""
         values = {"n_chips": cfg.n_chips, "partition": cfg.partition,
                   "tile_id": cfg.tile_id,
-                  "trsm_seq_chips": cfg.trsm_seq_chips}
+                  "trsm_seq_chips": cfg.trsm_seq_chips,
+                  "flash_block_id": cfg.flash_block_id,
+                  "flash_grid": cfg.flash_grid}
         names = {ax.name for ax in self.axes}
         if "trsm_seq_chips" not in names \
                 and cfg.trsm_seq_chips != TRSM_SEQ_CHIPS:
+            return False
+        if "flash_block_id" not in names and cfg.flash_block_id != 0:
+            return False
+        if "flash_grid" not in names and cfg.flash_grid != "dense":
             return False
         partial = {nm: v for nm, v in values.items() if nm in names}
         for ax in self.axes:
@@ -249,7 +273,9 @@ class ConfigSpace:
         argmin's first-occurrence tie-breaking exactly."""
         values = {"n_chips": cfg.n_chips, "partition": cfg.partition,
                   "tile_id": cfg.tile_id,
-                  "trsm_seq_chips": cfg.trsm_seq_chips}
+                  "trsm_seq_chips": cfg.trsm_seq_chips,
+                  "flash_block_id": cfg.flash_block_id,
+                  "flash_grid": cfg.flash_grid}
         return tuple(ax.values.index(values[ax.name]) for ax in self.axes)
 
     # -- sampling ----------------------------------------------------------
@@ -341,6 +367,26 @@ class ConfigSpace:
                  gates=gates),
             Axis("tile_id", tile_ids,
                  default=3 if 3 in tile_ids else tile_ids[0]),
+        ))
+
+    def with_flash(self, *, block_ids: Iterable[int] | None = None
+                   ) -> "ConfigSpace":
+        """This space extended with the flash-attention axes: the
+        ``FLASH_BLOCKS`` (bq, bkv) preset and the dense/tri KV-grid
+        knob, tri gated on the Q axis actually spanning >= 2 block rows
+        (below that the grids are identical).  Idempotent.  Only the
+        ``attn`` routine reads these knobs, so pre-existing axes (and
+        gemm/syrk/trsm pricing) are untouched — ties on non-attn rows
+        break to the dense 512x512 defaults via ``rank_of``."""
+        if any(ax.name in ("flash_block_id", "flash_grid")
+               for ax in self.axes):
+            return self
+        ids = tuple(block_ids) if block_ids is not None \
+            else tuple(range(len(FLASH_BLOCKS)))
+        return ConfigSpace(self.axes + (
+            Axis("flash_block_id", ids, default=0),
+            Axis("flash_grid", FLASH_GRIDS, default="tri",
+                 gates=(Gate("flash_tri_rows", "tri", 2),)),
         ))
 
     @classmethod

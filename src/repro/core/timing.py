@@ -4,9 +4,9 @@ Two backends:
 
 * ``SimulatedBackend`` — the TPU v5e analytic model (costmodel.py).  The
   default on this CPU-only container; see DESIGN.md §Hardware adaptation.
-  Covers all three BLAS-3 routines (gemm / syrk / trsm).
+  Covers every ROUTINES entry (gemm / syrk / trsm / attn).
 * ``MeasuredCPUBackend`` — real wall-clock timing of K-blocked numpy
-  BLAS-3 routines on the host.  The tunable knob with measurable effect
+  BLAS-3 routines (plus a KV-chunked causal attention) on the host.  The tunable knob with measurable effect
   on a single CPU core is the K-panel chunk (cache blocking); it
   demonstrates the full ADSALA pipeline against genuine measurements,
   reproducing the paper's install procedure 1:1 (repeat loop, median,
@@ -273,6 +273,39 @@ class MeasuredCPUBackend:
                 x[i0:i1] = np.linalg.solve(ell[i0:i1, i0:i1], x[i0:i1])
             dt = time.perf_counter() - t0
             c = x
+        elif routine == "attn":
+            # causal single-head attention on (Sq=m, Dh=k, Skv=n): the
+            # config's flash_bkv chunks the KV axis (cache blocking);
+            # its tri grid stops each row's chunk loop at the diagonal
+            bkv = max(8, min(cfg.flash_block[1], n))
+            q = self._operand(m, k)
+            kv = self._operand(n, k)
+            v = self._operand(n, k + 1)[:, :k]
+            tri = cfg.flash_grid != "dense"
+            t0 = time.perf_counter()
+            c = np.zeros((m, k), dtype=np.float32)
+            qi = np.arange(m, dtype=np.int64)[:, None]
+            num = np.zeros((m, k), dtype=np.float32)
+            den = np.zeros((m, 1), dtype=np.float32)
+            for n0 in range(0, n, bkv):
+                n1 = min(n0 + bkv, n)
+                rows = slice(0, m)
+                if tri and n0 > 0:
+                    first = int(np.searchsorted(qi[:, 0], n0))
+                    if first >= m:
+                        break
+                    rows = slice(first, m)
+                s = q[rows] @ kv[n0:n1].T
+                # finite mask value: a fully-masked row (dense grid,
+                # chunk past the diagonal) stays NaN-free garbage that
+                # costs the same FLOPs instead of warning on inf - inf
+                s = np.where(qi[rows] >= np.arange(n0, n1)[None, :],
+                             s, np.float32(-1e30))
+                p = np.exp(s - s.max(axis=1, keepdims=True))
+                num[rows] += p @ v[n0:n1]
+                den[rows] += p.sum(axis=1, keepdims=True)
+            c = num / np.maximum(den, 1e-30)
+            dt = time.perf_counter() - t0
         else:
             raise ValueError(f"unknown routine {routine!r}")
         del c

@@ -59,6 +59,14 @@ def _normalise_routines(shapes: list, routines) -> list[str]:
     return [ROUTINES[i] for i in routine_ids(routines, len(shapes))]
 
 
+def _flash_columns(cands: list[GemmConfig]
+                   ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-candidate (flash_bq, flash_bkv, flash_tri) feature columns."""
+    return (np.asarray([c.flash_block[0] for c in cands], float),
+            np.asarray([c.flash_block[1] for c in cands], float),
+            np.asarray([float(c.flash_grid != "dense") for c in cands]))
+
+
 class AdsalaTuner:
     """Predict-then-argmin worker-configuration selector."""
 
@@ -90,6 +98,14 @@ class AdsalaTuner:
                 max(c.n_chips for c in candidates),
                 tiles=tuple(sorted({c.tile_id for c in candidates})),
                 partitions=present)
+            # Flash-aware installs enumerate from with_flash(); when the
+            # candidate list carries non-default flash knobs the implied
+            # space must too, else those candidates (and any warm-start
+            # entries using them) fall outside `space.contains`.
+            if any(c.flash_block_id != 0 or c.flash_grid != "dense"
+                   for c in candidates):
+                space = space.with_flash(block_ids=tuple(
+                    sorted({c.flash_block_id for c in candidates})))
         self.space = space
         #: default beam width for ``select(search=True)``; None means
         #: fixed-candidate argmin unless a call opts in.
@@ -98,15 +114,21 @@ class AdsalaTuner:
         #: uniform install / no provenance).  Serving code compares the
         #: live recorded mix against it (see :meth:`workload_drift`).
         self.workload = workload
-        # GEMM-only artifacts predate the routine feature columns; keep
-        # feeding their models the exact legacy layout.
+        # Three feature generations (see repro.core.features): gen-1
+        # GEMM-only artifacts predate the routine columns, gen-2 BLAS-3
+        # artifacts predate the flash columns.  Keep feeding each model
+        # the exact layout it was fitted on.
         self._legacy_features = (feature_names is not None
                                  and "routine_syrk" not in feature_names)
+        self._flash_features = (feature_names is None
+                                or "routine_attn" in feature_names)
         # Routines the model was actually trained on (None = all):
         # selections outside this set would be extrapolation the model
         # has zero signal for, so they raise instead.
         if self._legacy_features and routines is None:
             routines = ("gemm",)
+        elif not self._flash_features and routines is None:
+            routines = ("gemm", "syrk", "trsm")
         self.routines = tuple(ROUTINES) if routines is None \
             else tuple(routines)
         for r in self.routines:
@@ -125,6 +147,7 @@ class AdsalaTuner:
         self._tiles = np.asarray([c.tile_id for c in candidates], float)
         self._parts = np.asarray(
             [_PARTITIONS.index(c.partition) for c in candidates], float)
+        self._flash = _flash_columns(candidates)
 
     @classmethod
     def from_artifact(cls, artifact_dir: str, **kw: Any) -> "AdsalaTuner":
@@ -171,7 +194,9 @@ class AdsalaTuner:
                         c = GemmConfig(cd["n_chips"], cd["partition"],
                                        cd["tile_id"],
                                        cd.get("trsm_seq_chips",
-                                              TRSM_SEQ_CHIPS))
+                                              TRSM_SEQ_CHIPS),
+                                       cd.get("flash_block_id", 0),
+                                       cd.get("flash_grid", "dense"))
                     except (KeyError, TypeError):
                         dropped += 1
                         continue
@@ -261,12 +286,14 @@ class AdsalaTuner:
         if candidates is None:
             cands = self.candidates
             chips, tiles, parts = self._chips, self._tiles, self._parts
+            flash = self._flash
         else:
             cands = list(candidates)
             chips = np.asarray([c.n_chips for c in cands], float)
             tiles = np.asarray([c.tile_id for c in cands], float)
             parts = np.asarray(
                 [_PARTITIONS.index(c.partition) for c in cands], float)
+            flash = _flash_columns(cands)
         C = len(cands)
         shapes = list(shapes)
         if not shapes:
@@ -292,7 +319,10 @@ class AdsalaTuner:
                 np.tile(chips, B), np.tile(tiles, B),
                 np.tile(parts, B),
                 None if self._legacy_features
-                else np.repeat(rids[lo:lo + B], C).astype(np.int64))
+                else np.repeat(rids[lo:lo + B], C).astype(np.int64),
+                flash=tuple(np.tile(f, B) for f in flash)
+                if self._flash_features and not self._legacy_features
+                else None)
             out[lo:lo + B] = np.exp(
                 self.model.predict(self.pipe.transform(X))).reshape(B, C)
         return out

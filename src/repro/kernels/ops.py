@@ -33,6 +33,7 @@ from typing import Literal
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.costmodel import (
     DEFAULT_ROUTINE,
@@ -382,18 +383,163 @@ def grouped_matmul(x: jax.Array, w: jax.Array, *,
     return grouped_matmul_pallas(x, w, bm=bm, bk=bk, bn=bn, interpret=interp)
 
 
+#: untuned-XLA fallback: the longest causal self-attention whose scores
+#: the SYRK materialisation path serves when no tuner is available to
+#: price the choice.  This retires the models.layers.SYRK_SCORES_MAX_SEQ
+#: hardcode — a tuner with attn + syrk signal replaces the threshold
+#: with a predicted-time comparison per shape.
+SYRK_FALLBACK_MAX_SEQ = 512
+
+#: hard memory guard on the SYRK score path (tuned or not): the full
+#: fp32 (Sq, Sq) score triangle must fit this budget per head — the
+#: chunked / flash paths keep only O(block x Skv) scores live, so past
+#: this point materialisation is inadmissible at any predicted speed.
+SYRK_SCORES_BYTES_MAX = 64 * 1024 * 1024
+
+
+def _syrk_scores_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                           sm_scale: float | None, *,
+                           tuner: AdsalaTuner | None,
+                           site: str, count: int) -> jax.Array:
+    """Causal self-attention with materialised SYRK-shaped scores.
+
+    With causal masking only the lower triangle of QK^T is ever
+    consumed — exactly SYRK's output shape — so the score product
+    dispatches (and is recorded, per head with its batch multiplicity)
+    as routine="syrk" on the (Sq, Dh, Sq) triple.  q/k/v: (BH, Sq, Dh);
+    computed in fp32 like the chunked path.
+    """
+    bh, sq, d = q.shape
+    scale = sm_scale if sm_scale is not None else float(d) ** -0.5
+    scores = jax.vmap(
+        lambda qi, ki: syrk(qi, ki, tuner=tuner, site=site, count=count,
+                            backend="xla"))(
+        q.astype(jnp.float32), k.astype(jnp.float32))
+    ids = jnp.arange(sq)
+    mask = ids[None, :] <= ids[:, None]
+    scores = jnp.where(mask[None], scores * scale, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def _chunked_attention_flat(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                            causal: bool, window: int | None,
+                            sm_scale: float | None,
+                            chunk: int = 512) -> jax.Array:
+    """Online XLA attention scanned over query chunks, (BH, S, D) in/out.
+
+    Never materialises the full (Sq, Skv) score matrix: per scan step
+    the live block is (BH, chunk, Skv) — the long-sequence XLA path.
+    """
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    scale = sm_scale if sm_scale is not None else float(d) ** -0.5
+    nc = -(-sq // chunk)
+    pad = nc * chunk - sq
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0)))
+    qc = qp.reshape(bh, nc, chunk, d).transpose(1, 0, 2, 3)
+    kv_ids = jnp.arange(skv)
+
+    def step(_, qi_ci):
+        qi, ci = qi_ci
+        s = jnp.einsum("bqd,bkd->bqk", qi.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+        q_ids = ci * chunk + jnp.arange(chunk)
+        mask = jnp.ones((chunk, skv), dtype=bool)
+        if causal:
+            mask &= kv_ids[None, :] <= q_ids[:, None]
+        if window is not None:
+            mask &= kv_ids[None, :] > q_ids[:, None] - window
+        s = jnp.where(mask[None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(step, None, (qc, jnp.arange(nc)))
+    return outs.transpose(1, 0, 2, 3).reshape(bh, nc * chunk, d)[:, :sq]
+
+
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: int | None = None,
                     sm_scale: float | None = None,
-                    bq: int = 512, bkv: int = 512,
+                    bq: int | None = None, bkv: int | None = None,
+                    grid: str | None = None,
+                    tuner: AdsalaTuner | None = None,
                     backend: Backend = "auto",
-                    interpret: bool | None = None) -> jax.Array:
+                    interpret: bool | None = None,
+                    site: str = "attn.core",
+                    count: int | None = None) -> jax.Array:
+    """Tuned attention: softmax(q kᵀ, causal/windowed) v on (BH, S, D).
+
+    Masked (causal or windowed) attention dispatches as routine="attn"
+    on the per-head (Sq, Dh, Skv) triple with ``count`` (default BH)
+    multiplicity; non-causal unwindowed attention keeps the gemm
+    identity.  The tuner's chosen :class:`GemmConfig` supplies the
+    flash blocks (``flash_block``) and the KV-grid kind
+    (``flash_grid``: dense vs block-sparse triangular), and on the XLA
+    backend whether the SYRK score-materialisation path wins instead —
+    a predicted-time comparison per shape, replacing the retired
+    ``SYRK_SCORES_MAX_SEQ`` hardcode (untuned XLA callers fall back to
+    that threshold, :data:`SYRK_FALLBACK_MAX_SEQ`, under the
+    :data:`SYRK_SCORES_BYTES_MAX` memory guard).  Explicit
+    ``bq``/``bkv``/``grid`` overrides skip the tuner entirely, like
+    ``matmul``'s explicit ``tile``.  Every path reports its dispatch —
+    the SYRK path through :func:`syrk` itself (no double event), the
+    flash/chunked paths as one attn/gemm event carrying the resolved
+    config — to any active DispatchRecorder.
+    """
     be = resolve_backend(backend)
+    if q.ndim != 3 or k.shape != v.shape or q.shape[0] != k.shape[0] \
+            or q.shape[2] != k.shape[2]:
+        raise ValueError(f"bad attention shapes {q.shape} {k.shape}")
+    bh, sq, d = (int(s) for s in q.shape)
+    skv = int(k.shape[1])
+    count = bh if count is None else count
+    masked = causal or window is not None
+    explicit = bq is not None or bkv is not None or grid is not None
+    rt = supported_routine("attn" if masked else DEFAULT_ROUTINE,
+                           None if explicit else tuner)
+    cfg, hit = None, False
+    if tuner is not None and not explicit:
+        hit = tuner.peek(sq, d, skv, rt)
+        cfg = tuner.select(sq, d, skv, rt)
+    if cfg is not None and rt == "attn":
+        fbq, fbkv = cfg.flash_block
+        fgrid = cfg.flash_grid
+    else:
+        # untuned defaults: under a causal/window mask the block-sparse
+        # grid is a pure win (it only drops all-masked tiles); without
+        # a mask the two grids are the same tile list anyway
+        fbq, fbkv, fgrid = 512, 512, ("tri" if masked else "dense")
+    bq = bq if bq is not None else fbq
+    bkv = bkv if bkv is not None else fbkv
+    grid = grid if grid is not None else fgrid
+
     if be == "xla":
-        return ref.flash_attention_ref(q, k, v, causal=causal,
-                                       window=window, sm_scale=sm_scale)
+        if causal and window is None and sq == skv \
+                and sq * sq * 4 <= SYRK_SCORES_BYTES_MAX:
+            if cfg is not None and rt == "attn" \
+                    and "syrk" in tuner.routines:
+                _, t_attn = tuner.select_with_times(sq, d, skv, "attn")
+                _, t_syrk = tuner.select_with_times(sq, d, sq, "syrk")
+                use_syrk = float(np.min(t_syrk)) < float(np.min(t_attn))
+            else:
+                use_syrk = (tuner is None or rt != "attn") \
+                    and sq <= SYRK_FALLBACK_MAX_SEQ
+            if use_syrk:
+                return _syrk_scores_attention(q, k, v, sm_scale,
+                                              tuner=tuner, site=site,
+                                              count=count)
+        recorder.record(rt, sq, d, skv, config=cfg, cache_hit=hit,
+                        site=site, count=count)
+        return _chunked_attention_flat(q, k, v, causal=causal,
+                                       window=window, sm_scale=sm_scale,
+                                       chunk=min(512, max(1, sq)))
+    recorder.record(rt, sq, d, skv, config=cfg, cache_hit=hit,
+                    site=site, count=count)
     interp = (jax.default_backend() != "tpu") if interpret is None \
         else interpret
     return flash_attention_pallas(q, k, v, causal=causal, window=window,
                                   sm_scale=sm_scale, bq=bq, bkv=bkv,
-                                  interpret=interp)
+                                  interpret=interp, grid=grid)

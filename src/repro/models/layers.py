@@ -23,7 +23,6 @@ __all__ = [
     "linear", "mlp_defs", "apply_mlp",
     "rope_angles", "apply_rope",
     "attention_defs", "attention_train", "attention_decode",
-    "SYRK_SCORES_MAX_SEQ",
     "AttnSpec", "KVCache", "init_kv_cache", "seed_kv_cache",
 ]
 
@@ -145,15 +144,6 @@ class AttnSpec:
     causal: bool = True
 
 
-#: longest self-attention the SYRK score path will materialise in full.
-#: The chunked XLA path materialises a (B, H, min(512, Sq), Skv) score
-#: block per scan step; at Sq <= this bound the full (Sq, Sq) triangle
-#: is no bigger, so lowering QK^T through ops.syrk costs no extra
-#: memory.  Longer sequences keep the chunked path and record the SYRK
-#: identity as a dispatch hint instead.
-SYRK_SCORES_MAX_SEQ = 512
-
-
 def attention_defs(s: AttnSpec) -> dict:
     d, h, hk, hd = s.d_model, s.n_heads, s.n_kv_heads, s.head_dim
     defs = {"wq": ParamDef((d, h * hd), ("embed", "heads")),
@@ -238,32 +228,6 @@ def chunked_attention_xla(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out[:, :, :sq]
 
 
-def _attention_scores_syrk(q: jax.Array, k: jax.Array, v: jax.Array,
-                           s: AttnSpec, tuner) -> jax.Array:
-    """Unwindowed causal self-attention through the SYRK score path.
-
-    With causal masking only the lower triangle of QK^T is ever
-    consumed — exactly SYRK's output shape — so the score product
-    dispatches (and is recorded) as routine="syrk" on the (Sq, Dh, Sq)
-    triple instead of being mispriced as a full GEMM.  q/k/v are
-    (B*H, Sq, Dh); computed in fp32 like the chunked path.  Windowed
-    layers never reach here (their band is a subset of the triangle —
-    SYRK pricing would overstate them).
-    """
-    bh, sq = q.shape[0], q.shape[1]
-    scale = s.head_dim ** -0.5
-    scores = jax.vmap(
-        lambda qi, ki: ops.syrk(qi, ki, tuner=tuner, site="attn.qk",
-                                count=bh))(
-        q.astype(jnp.float32), k.astype(jnp.float32))
-    ids = jnp.arange(sq)
-    mask = ids[None, :] <= ids[:, None]
-    scores = jnp.where(mask[None], scores * scale, -1e30)
-    probs = jax.nn.softmax(scores, axis=-1)
-    return jnp.einsum("bqk,bkd->bqd", probs, v.astype(jnp.float32)
-                      ).astype(q.dtype)
-
-
 def attention_train(p: dict, x: jax.Array, s: AttnSpec, tuner=None
                     ) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
     """Full-sequence self-attention (training / prefill internals).
@@ -271,48 +235,29 @@ def attention_train(p: dict, x: jax.Array, s: AttnSpec, tuner=None
     Returns (out, (k, v)) — the pre-repeat (B, S, Hkv, Dh) projections so
     prefill can seed the decode cache without recomputation.
 
-    Routine identity: unwindowed causal self-attention scores are
-    SYRK-shaped (the causal mask consumes only the lower triangle of
-    the square QK^T).  On the XLA backend at Sq <= SYRK_SCORES_MAX_SEQ
-    they actually lower through :func:`ops.syrk`; otherwise (flash
-    kernel / long sequences) the identity is recorded via
-    :func:`ops.observe` so the tuner is asked the right question either
-    way.  Sliding-window and non-causal scores stay gemm-tagged.
+    The attention core is one :func:`ops.flash_attention` dispatch on
+    the flattened (B*H, Sq, Dh) heads: causal (and sliding-window)
+    layers dispatch as routine="attn" and the tuner resolves the flash
+    blocks, the dense vs block-sparse triangular KV grid, and — on the
+    XLA backend — whether the SYRK score-materialisation path wins for
+    this shape (recorded as routine="syrk" through ops.syrk, like the
+    retired fixed-threshold lowering).  Non-causal unwindowed layers
+    stay gemm-tagged.
     """
     b, sq, _ = x.shape
     positions = jnp.arange(sq)
     q, k, v = _project_qkv(p, x, s, positions, tuner)
     kr = _repeat_kv(k, s.n_heads)
     vr = _repeat_kv(v, s.n_heads)
-    backend = ops.resolve_backend()
-    # sliding-window scores consume only a thin band, not the full
-    # lower triangle — pricing them as SYRK would overstate their flop
-    # share by ~sq/(2*window), so only unwindowed causal qualifies
-    use_syrk = (backend == "xla" and s.causal and s.window is None
-                and sq <= SYRK_SCORES_MAX_SEQ)
     qt = q.transpose(0, 2, 1, 3)           # (B, H, S, Dh)
     kt = kr.transpose(0, 2, 1, 3)
     vt = vr.transpose(0, 2, 1, 3)
-    if use_syrk:
-        flat = (b * s.n_heads, sq, s.head_dim)
-        out = _attention_scores_syrk(qt.reshape(flat), kt.reshape(flat),
-                                     vt.reshape(flat), s, tuner)
-        out = out.reshape(b, s.n_heads, sq, s.head_dim).transpose(0, 2, 1, 3)
-    else:
-        rt = "syrk" if s.causal and s.window is None else "gemm"
-        ops.observe(sq, s.head_dim, sq, tuner, routine=rt,
-                    site="attn.qk", count=b * s.n_heads)
-        if backend == "pallas":
-            flat = (b * s.n_heads, sq, s.head_dim)
-            out = ops.flash_attention(qt.reshape(flat), kt.reshape(flat),
-                                      vt.reshape(flat), causal=s.causal,
-                                      window=s.window)
-            out = out.reshape(b, s.n_heads, sq,
-                              s.head_dim).transpose(0, 2, 1, 3)
-        else:
-            out = chunked_attention_xla(
-                qt, kt, vt, causal=s.causal, window=s.window,
-                chunk=min(512, sq)).transpose(0, 2, 1, 3)
+    flat = (b * s.n_heads, sq, s.head_dim)
+    out = ops.flash_attention(qt.reshape(flat), kt.reshape(flat),
+                              vt.reshape(flat), causal=s.causal,
+                              window=s.window, tuner=tuner,
+                              site="attn.core")
+    out = out.reshape(b, s.n_heads, sq, s.head_dim).transpose(0, 2, 1, 3)
     ops.observe(b * sq, s.n_heads * s.head_dim, x.shape[-1], tuner,
                 site="attn.out_proj")
     out = linear(out.reshape(b, sq, s.n_heads * s.head_dim), p["wo"])

@@ -51,7 +51,7 @@ def tiny_artifact(tmp_path_factory) -> InstallRun:
     cfg = InstallConfig(
         n_samples=48, repeats=2, tile_ids=(0, 3),
         models=("linear_regression", "decision_tree", "xgboost"),
-        routines=("gemm", "syrk", "trsm"),
+        routines=("gemm", "syrk", "trsm", "attn"),
         grid_budget="small", cv_splits=3, seed=0)
     backend = SimulatedBackend(seed=0)
     data = gather_data(backend, cfg)

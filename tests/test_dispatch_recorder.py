@@ -52,7 +52,8 @@ def _serve_once(arch: str, tuner, rec: DispatchRecorder) -> None:
 
 def test_serve_step_records_nontrivial_routine_mix(tiny_artifact):
     """A serve prefill+decode step records >= 2 distinct routines:
-    prefill self-attention dispatches SYRK, the decode cache update
+    prefill self-attention dispatches ATTN (or the tuner's SYRK score
+    materialisation when predicted faster), the decode cache update
     dispatches TRSM, everything else GEMM."""
     tuner = AdsalaTuner.from_artifact(tiny_artifact.dir)
     rec = DispatchRecorder()
@@ -60,21 +61,28 @@ def test_serve_step_records_nontrivial_routine_mix(tiny_artifact):
 
     mix = rec.routine_mix()
     assert len(mix) >= 2, f"trivial routine mix {mix}"
-    assert set(mix) <= {"gemm", "syrk", "trsm"}
+    assert set(mix) <= {"gemm", "syrk", "trsm", "attn"}
     assert abs(sum(mix.values()) - 1.0) < 1e-9
-    # prefill self-attention went through the SYRK-shaped score path;
-    # the vmapped per-head call carries its batch multiplicity so the
-    # flops-weighted mix doesn't under-count score volume by B*H
-    syrk_events = [e for e in rec.sites("attn.qk") if e.routine == "syrk"]
-    assert syrk_events, "prefill QK^T did not record syrk"
-    assert all(e.m == e.n == S for e in syrk_events)
+    # prefill self-attention dispatched through ops.flash_attention:
+    # either one attn event or the per-head syrk score path, both on
+    # the per-head (S, Dh, S) triple with B*H batch multiplicity so the
+    # flops-weighted mix doesn't under-count score volume
+    core_events = [e for e in rec.sites("attn.core")
+                   if e.routine in ("attn", "syrk")]
+    assert core_events, "prefill attention recorded no attn/syrk event"
+    assert all(e.m == e.n == S for e in core_events)
     cfg = get_smoke_config("stablelm-1.6b")
-    assert all(e.count == B * cfg.n_heads for e in syrk_events)
+    assert all(e.count == B * cfg.n_heads for e in core_events)
     # decode cache update is TRSM-tagged
     trsm_events = [e for e in rec.sites("attn.cache_update")]
     assert trsm_events and all(e.routine == "trsm" for e in trsm_events)
     # the tuner was actually consulted: events carry chosen configs
     assert all(e.config is not None for e in rec.events)
+    # attn events surface the resolved flash config knobs
+    for e in core_events:
+        if e.routine == "attn":
+            assert e.config.flash_grid in ("dense", "tri")
+            assert e.config.flash_block[0] >= 128
 
 
 def test_events_carry_tuner_cache_hits(tiny_artifact):
@@ -171,8 +179,8 @@ def test_syrk_qk_matches_gemm_path(backend):
 
 @pytest.mark.parametrize("backend", ["pallas", "xla"])
 def test_attention_train_parity_vs_pre_syrk_path(backend, monkeypatch):
-    """attention_train with the SYRK score lowering matches the
-    pre-existing path (chunked XLA / flash) to fp32 tolerance."""
+    """attention_train with the untuned SYRK score lowering matches the
+    chunked XLA / flash path to fp32 tolerance."""
     monkeypatch.setenv("ADSALA_BACKEND", backend)
     spec = AttnSpec(d_model=32, n_heads=2, n_kv_heads=2, head_dim=16)
     rng = jax.random.PRNGKey(0)
@@ -184,8 +192,9 @@ def test_attention_train_parity_vs_pre_syrk_path(backend, monkeypatch):
         "wo": jax.random.normal(jax.random.PRNGKey(4), (32, 32)) * 0.1,
     }
     out_tagged, _ = attention_train(p, x, spec)
-    # force the legacy path by disabling the SYRK lowering
-    monkeypatch.setattr(L, "SYRK_SCORES_MAX_SEQ", 0)
+    # force the non-materialised path by disabling the untuned SYRK
+    # fallback threshold
+    monkeypatch.setattr(ops, "SYRK_FALLBACK_MAX_SEQ", 0)
     out_legacy, _ = attention_train(p, x, spec)
     np.testing.assert_allclose(np.asarray(out_tagged),
                                np.asarray(out_legacy),

@@ -1,0 +1,295 @@
+"""Tuned triangular flash attention: dense-vs-tri kernel parity, the
+block-sparse tile map's properties, the padded-KV regression, and the
+tuner-driven ops.flash_attention dispatch.
+
+Runs under real `hypothesis` or the deterministic fallback shim —
+only ``integers`` / ``sampled_from`` / ``booleans`` strategies are used.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import AdsalaTuner
+from repro.kernels import ops
+from repro.kernels.flash_attention import (
+    FLASH_GRID_KINDS,
+    flash_attention_pallas,
+    flash_grid_counts,
+    flash_tile_map,
+)
+from repro.kernels.recorder import DispatchRecorder
+from repro.kernels.ref import flash_attention_ref
+
+
+def _rand_qkv(sq, skv, d=16, bh=2, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((bh, sq, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((bh, skv, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((bh, skv, d)), dtype)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# dense vs triangular grid parity (interpret mode)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sq,skv,causal,window", [
+    (96, 96, True, None),          # square causal
+    (100, 64, True, None),         # padded non-square, sq > skv
+    (64, 100, True, None),         # padded non-square, sq < skv
+    (96, 96, True, 40),            # sliding window (mixtral-style)
+    (80, 80, False, None),         # non-causal (tri map == dense map)
+    (96, 96, False, 24),           # window without causality
+])
+def test_tri_grid_matches_dense_grid(sq, skv, causal, window):
+    q, k, v = _rand_qkv(sq, skv)
+    outs = {}
+    for grid in FLASH_GRID_KINDS:
+        outs[grid] = np.asarray(flash_attention_pallas(
+            q, k, v, bq=32, bkv=32, causal=causal, window=window,
+            interpret=True, grid=grid))
+    # identical block arithmetic in identical order -> bitwise equal
+    np.testing.assert_array_equal(outs["tri"], outs["dense"])
+    want = np.asarray(flash_attention_ref(q, k, v, causal=causal,
+                                          window=window))
+    np.testing.assert_allclose(outs["tri"], want, atol=2e-5, rtol=2e-5)
+
+
+def test_tri_grid_matches_dense_gqa_broadcast_kv():
+    """GQA: 8 query heads sharing 2 KV heads, KV broadcast before the
+    flat (B*H, S, D) call — both grids agree with the oracle."""
+    rng = np.random.default_rng(3)
+    b, h, hk, s, d = 2, 8, 2, 72, 16
+    q = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+    kv = rng.standard_normal((2, b, hk, s, d)).astype(np.float32)
+    k, v = (jnp.asarray(np.repeat(a, h // hk, axis=1)) for a in kv)
+    flat = (b * h, s, d)
+    outs = [flash_attention_pallas(q.reshape(flat), k.reshape(flat),
+                                   v.reshape(flat), bq=32, bkv=32,
+                                   interpret=True, grid=g)
+            for g in FLASH_GRID_KINDS]
+    np.testing.assert_array_equal(np.asarray(outs[0]),
+                                  np.asarray(outs[1]))
+    want = flash_attention_ref(q.reshape(flat), k.reshape(flat),
+                               v.reshape(flat))
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_bf16_tri_parity():
+    q, k, v = _rand_qkv(64, 64, dtype=jnp.bfloat16)
+    a, b_ = (np.asarray(flash_attention_pallas(
+        q, k, v, bq=32, bkv=32, interpret=True, grid=g), np.float32)
+        for g in FLASH_GRID_KINDS)
+    np.testing.assert_array_equal(a, b_)
+
+
+def test_unknown_grid_rejected():
+    q, k, v = _rand_qkv(32, 32)
+    with pytest.raises(ValueError, match="unknown flash grid"):
+        flash_attention_pallas(q, k, v, interpret=True, grid="banded")
+
+
+# ---------------------------------------------------------------------------
+# padded-KV masking regression (the sq > skv denominator leak)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("grid", FLASH_GRID_KINDS)
+@pytest.mark.parametrize("sq,skv", [(100, 64), (130, 70), (96, 33)])
+def test_causal_padded_kv_regression(grid, sq, skv):
+    """sq > skv with causal masking: padded KV ids in [skv, gkv*bkv)
+    satisfy kv <= q for the tail query rows, so without the explicit
+    KV-length mask their zero-K scores (exp(0) each) inflate the
+    softmax denominator and shrink every tail-row output."""
+    q, k, v = _rand_qkv(sq, skv, seed=7)
+    out = np.asarray(flash_attention_pallas(
+        q, k, v, bq=32, bkv=32, causal=True, interpret=True, grid=grid))
+    want = np.asarray(flash_attention_ref(q, k, v, causal=True))
+    np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+    # the tail rows specifically (q id >= skv) are the leak site
+    np.testing.assert_allclose(out[:, skv:], want[:, skv:],
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_non_causal_padded_kv_supported():
+    """Non-causal with a ragged Skv used to raise; the KV-length mask
+    makes it exact instead."""
+    q, k, v = _rand_qkv(64, 50, seed=9)
+    for grid in FLASH_GRID_KINDS:
+        out = flash_attention_pallas(q, k, v, bq=32, bkv=32,
+                                     causal=False, interpret=True,
+                                     grid=grid)
+        want = flash_attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# tile-map properties
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(sq=st.integers(8, 600), skv=st.integers(8, 600),
+       bq=st.sampled_from([16, 32, 64, 128]),
+       bkv=st.sampled_from([16, 32, 64, 128]),
+       causal=st.sampled_from([True, False]),
+       window=st.sampled_from([None, 16, 64, 200]))
+def test_tile_map_never_launches_fully_masked_tile(sq, skv, bq, bkv,
+                                                   causal, window):
+    """Every non-degenerate tile in the triangular map intersects the
+    attention mask: some (q, kv) pair with kv < skv is unmasked.  (The
+    single placeholder tile a fully-masked row emits so its output is
+    still written is flagged first AND last.)"""
+    qt, kvt, first, last = flash_tile_map(sq, skv, bq, bkv,
+                                          causal=causal, window=window)
+    gq, gkv = -(-sq // bq), -(-skv // bkv)
+    assert len(qt) <= gq * gkv
+    rows_seen = set()
+    for i, j, f, l in zip(qt, kvt, first, last):
+        rows_seen.add(int(i))
+        q_ids = np.arange(i * bq, i * bq + bq)[:, None]
+        kv_ids = np.arange(j * bkv, j * bkv + bkv)[None, :]
+        mask = kv_ids < skv
+        if causal:
+            mask = mask & (kv_ids <= q_ids)
+        if window is not None:
+            mask = mask & (kv_ids > q_ids - window)
+        if not (f and l):              # degenerate placeholders exempt
+            assert mask.any(), (
+                f"fully-masked tile ({i},{j}) launched for sq={sq} "
+                f"skv={skv} bq={bq} bkv={bkv} causal={causal} "
+                f"window={window}")
+    # every output row block is written exactly once
+    assert rows_seen == set(range(gq))
+    for i in range(gq):
+        row = [t for t in range(len(qt)) if qt[t] == i]
+        assert sum(int(first[t]) for t in row) == 1
+        assert sum(int(last[t]) for t in row) == 1
+        # row-major, KV ascending: the sequential pipeline streams each
+        # row's K/V blocks contiguously
+        assert list(kvt[row]) == sorted(kvt[row])
+
+
+@settings(max_examples=25, deadline=None)
+@given(s=st.integers(256, 4096), b=st.sampled_from([64, 128, 256]))
+def test_causal_square_tri_grid_fraction(s, b):
+    """At Sq = Skv the triangular grid launches g(g+1)/2 of g² tiles —
+    the (g+1)/2g fraction the cost model prices as tri_frac."""
+    tri, dense = flash_grid_counts(s, s, b, b, causal=True)
+    g = -(-s // min(b, s))
+    assert dense == g * g
+    assert tri == g * (g + 1) // 2
+
+
+# ---------------------------------------------------------------------------
+# tuner-driven dispatch through ops.flash_attention
+# ---------------------------------------------------------------------------
+
+def test_ops_flash_attention_honors_backend_env(monkeypatch):
+    q, k, v = _rand_qkv(48, 48, seed=11)
+    monkeypatch.setenv("ADSALA_BACKEND", "xla")
+    out_xla = ops.flash_attention(q, k, v, causal=True)
+    monkeypatch.setenv("ADSALA_BACKEND", "pallas")
+    out_pl = ops.flash_attention(q, k, v, causal=True)
+    monkeypatch.setenv("ADSALA_BACKEND", "bogus")
+    with pytest.raises(ValueError, match="ADSALA_BACKEND"):
+        ops.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out_xla), np.asarray(out_pl),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_ops_flash_attention_records_resolved_config(tiny_artifact,
+                                                     monkeypatch):
+    """On the pallas backend a tuned masked call records ONE attn event
+    whose config carries the resolved flash knobs (not config=None)."""
+    monkeypatch.setenv("ADSALA_BACKEND", "pallas")
+    tuner = AdsalaTuner.from_artifact(tiny_artifact.dir)
+    q, k, v = _rand_qkv(40, 40, seed=13)
+    with DispatchRecorder() as rec:
+        out = ops.flash_attention(q, k, v, causal=True, tuner=tuner)
+    assert out.shape == q.shape
+    attn = [e for e in rec.events if e.routine == "attn"]
+    assert len(attn) == 1
+    e = attn[0]
+    assert (e.m, e.k, e.n) == (40, 16, 40)
+    assert e.count == q.shape[0]
+    assert e.config is not None
+    assert e.config.flash_grid in FLASH_GRID_KINDS
+    assert e.config.flash_block[0] >= 128
+    # the same shape again is served from the tuner's LRU
+    with DispatchRecorder() as rec2:
+        ops.flash_attention(q, k, v, causal=True, tuner=tuner)
+    assert [e.cache_hit for e in rec2.events
+            if e.routine == "attn"] == [True]
+
+
+def test_ops_flash_attention_explicit_knobs_skip_tuner(tiny_artifact,
+                                                       monkeypatch):
+    """Explicit bq/bkv/grid overrides bypass the tuner (like matmul's
+    explicit tile) and still compute the right thing."""
+    monkeypatch.setenv("ADSALA_BACKEND", "pallas")
+    tuner = AdsalaTuner.from_artifact(tiny_artifact.dir)
+    calls_before = tuner.stats["calls"]
+    q, k, v = _rand_qkv(64, 64, seed=17)
+    with DispatchRecorder() as rec:
+        out = ops.flash_attention(q, k, v, causal=True, tuner=tuner,
+                                  bq=32, bkv=32, grid="tri")
+    assert tuner.stats["calls"] == calls_before
+    assert [e.config for e in rec.events] == [None]
+    want = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_ops_flash_attention_untuned_xla_syrk_fallback(monkeypatch):
+    """Untuned XLA causal self-attention at Sq <= SYRK_FALLBACK_MAX_SEQ
+    keeps the SYRK score materialisation (the retired layers hardcode's
+    behavior), recording syrk — not attn — events."""
+    monkeypatch.setenv("ADSALA_BACKEND", "xla")
+    q, k, v = _rand_qkv(32, 32, seed=19)
+    with DispatchRecorder() as rec:
+        out = ops.flash_attention(q, k, v, causal=True)
+    assert {e.routine for e in rec.events} == {"syrk"}
+    # ...and past the threshold the chunked path records attn
+    monkeypatch.setattr(ops, "SYRK_FALLBACK_MAX_SEQ", 16)
+    with DispatchRecorder() as rec2:
+        out2 = ops.flash_attention(q, k, v, causal=True)
+    assert {e.routine for e in rec2.events} == {"attn"}
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_ops_flash_attention_tuned_xla_prices_syrk_vs_attn(tiny_artifact,
+                                                           monkeypatch):
+    """With attn + syrk signal the XLA branch picks the score path by
+    predicted time, not by the retired hardcoded threshold: whatever it
+    picks is recorded, and both paths agree numerically."""
+    monkeypatch.setenv("ADSALA_BACKEND", "xla")
+    tuner = AdsalaTuner.from_artifact(tiny_artifact.dir)
+    q, k, v = _rand_qkv(48, 48, seed=23)
+    with DispatchRecorder() as rec:
+        out = ops.flash_attention(q, k, v, causal=True, tuner=tuner)
+    routines = {e.routine for e in rec.events}
+    assert routines <= {"attn", "syrk"} and routines
+    t_attn = float(np.min(tuner.select_with_times(48, 16, 48, "attn")[1]))
+    t_syrk = float(np.min(tuner.select_with_times(48, 16, 48, "syrk")[1]))
+    expected = "syrk" if t_syrk < t_attn else "attn"
+    assert routines == {expected}
+    want = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_ops_flash_attention_non_causal_stays_gemm(tiny_artifact,
+                                                   monkeypatch):
+    """Unmasked attention keeps the gemm identity (dense grid, no attn
+    routine) — the attn routine means a mask made tiles skippable."""
+    monkeypatch.setenv("ADSALA_BACKEND", "pallas")
+    tuner = AdsalaTuner.from_artifact(tiny_artifact.dir)
+    q, k, v = _rand_qkv(40, 40, seed=29)
+    with DispatchRecorder() as rec:
+        ops.flash_attention(q, k, v, causal=False, tuner=tuner)
+    assert {e.routine for e in rec.events} == {"gemm"}

@@ -202,7 +202,7 @@ def test_artifact_warm_start_round_trip(tiny_artifact):
         open(tiny_artifact.dir + "/config.json"))["warm_start"]
     assert ws["version"] == 3
     assert len(ws["dims"]) == n and len(ws["configs"]) == n
-    assert set(ws["routines"]) == {"gemm", "syrk", "trsm"}
+    assert set(ws["routines"]) == {"gemm", "syrk", "trsm", "attn"}
     assert all({"n_chips", "partition", "tile_id"} <= set(c)
                for c in ws["configs"])
 
