@@ -1,0 +1,207 @@
+"""Closed-loop serving: does the drift-triggered re-install pay off?
+
+Stages the ISSUE-8 scenario end to end:
+
+1. install an artifact mix-weighted by a *prefill-like* profile
+   (large square gemms);
+2. shift serving to a *decode-like* mix (skinny gemms, per-head syrk,
+   trsm cache updates) recorded into per-traffic-class recorders;
+3. let the :class:`repro.serve.ReinstallManager` notice the drift and
+   re-install + hot-swap in the background while hammer threads keep
+   dispatching through the manager;
+4. measure predicted-time regret on the *shifted* mix against the
+   noise-free oracle, before and after the swap:
+
+       regret = mean( t_clean(chosen) / t_clean(best) - 1 )
+
+Reports ``name,us_per_call,derived`` CSV: pre/post regret, the
+improvement ratio, pre/post drift, the fire-to-swap wall-clock and the
+dispatches served during the install.  ``--smoke`` (the CI reinstall
+job) asserts the closed loop's contract: post-swap regret < pre-swap,
+drift closed below the threshold, and zero dropped dispatches.
+"""
+
+from __future__ import annotations
+
+import sys
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro.core import (
+    AdsalaTuner,
+    InstallConfig,
+    SimulatedBackend,
+    WorkloadProfile,
+    candidate_configs,
+    install,
+)
+from repro.kernels.recorder import DispatchEvent, DispatchRecorder
+from repro.serve import ReinstallConfig, ReinstallManager
+
+ROUTINES3 = ("gemm", "syrk", "trsm")
+THRESHOLD = 0.25
+
+
+def prefill_profile() -> WorkloadProfile:
+    """Install-time mix: big square prompt-processing gemms."""
+    events = [
+        DispatchEvent("gemm", 4096, 2048, 2048, count=96, site="proj"),
+        DispatchEvent("gemm", 4096, 2048, 8192, count=32, site="mlp.up"),
+        DispatchEvent("gemm", 4096, 8192, 2048, count=32, site="mlp.dn"),
+        DispatchEvent("syrk", 4096, 64, 4096, count=8, site="attn.qk"),
+    ]
+    return WorkloadProfile.from_events(
+        events, by="flops", source={"kind": "bench", "name": "prefill"})
+
+
+def decode_events() -> list[DispatchEvent]:
+    """Shifted serving mix: skinny decode gemms + per-head syrk scores
+    + trsm-tagged cache updates (cf. the PR 4 recorded mixes)."""
+    return [
+        DispatchEvent("gemm", 64, 2048, 2048, count=96, site="proj"),
+        DispatchEvent("gemm", 64, 2048, 8192, count=32, site="mlp.up"),
+        DispatchEvent("gemm", 64, 8192, 2048, count=32, site="mlp.dn"),
+        DispatchEvent("gemm", 64, 2048, 50257, count=1, site="logits"),
+        DispatchEvent("syrk", 512, 64, 512, count=64, site="attn.qk"),
+        DispatchEvent("trsm", 64, 64, 2048, count=16, site="cache"),
+    ]
+
+
+def _regret(artifact: str, backend: SimulatedBackend,
+            eval_dims: np.ndarray, names: list[str],
+            t_best: np.ndarray) -> float:
+    """Mean oracle regret of the artifact's tuner on the eval mix.
+
+    The clean times are re-priced over the *tuner's own* candidate list
+    — a budgeted install persists the beam-survivor union, not the
+    dense grid, so indexing a shared dense matrix with the tuner's
+    argmin would compare different configs.  ``t_best`` stays the
+    global dense-grid oracle: a budgeted artifact whose pool misses the
+    true best pays for it honestly."""
+    tuner = AdsalaTuner.from_artifact(artifact)
+    pred = tuner.predicted_times_many([tuple(d) for d in eval_dims],
+                                      routines=names)
+    clean = backend.time_routine_clean_batch(eval_dims, tuner.candidates,
+                                             routines=names)
+    chosen = clean[np.arange(len(eval_dims)), np.argmin(pred, axis=1)]
+    return float(np.mean(chosen / np.maximum(t_best, 1e-12) - 1.0))
+
+
+def run(smoke: bool = False) -> list[str]:
+    lines: list[str] = []
+    backend = SimulatedBackend(seed=0)
+    n_samples = 120 if smoke else 400
+    base = dict(n_samples=n_samples, repeats=2, tile_ids=(0, 3),
+                routines=ROUTINES3, models=("lightgbm",),
+                cv_splits=2, seed=0)
+
+    # 1. the artifact serving starts on: weighted by the PREFILL mix
+    art = tempfile.mkdtemp(prefix="reinstall_live_")
+    install(backend, InstallConfig(**base, workload=prefill_profile()),
+            artifact_dir=art)
+
+    # 2. serving shifts: per-traffic-class recorders fill with the
+    # decode mix (prefill volume dries up — one residual event)
+    recs = {"prefill": DispatchRecorder(), "decode": DispatchRecorder()}
+    recs["prefill"].events.append(
+        DispatchEvent("gemm", 4096, 2048, 2048, count=1, site="proj"))
+    for _ in range(8):
+        recs["decode"].events.extend(decode_events())
+
+    shifted = WorkloadProfile.from_events(decode_events(), by="flops")
+    n_eval = 80 if smoke else 200
+    eval_dims = shifted.sample_dims(
+        n_eval, bias=1.0, mem_limit_bytes=InstallConfig().mem_limit_mb
+        * 2**20, dtype_bytes=2, seed=1234)
+    quotas = shifted.routine_quotas(ROUTINES3, n_eval, floor=0.0)
+    names = np.repeat(np.asarray(ROUTINES3, dtype=object),
+                      [quotas[r] for r in ROUTINES3])
+    names = list(names[np.random.default_rng(7).permutation(len(names))])
+    cands = candidate_configs(InstallConfig().max_chips, tiles=(0, 3))
+    clean = backend.time_routine_clean_batch(eval_dims, cands,
+                                             routines=names)
+    t_best = clean.min(axis=1)          # global dense-grid oracle
+
+    r_pre = _regret(art, backend, eval_dims, names, t_best)
+
+    # 3. the closed loop: manager notices, re-installs in the
+    # background, swaps — while hammer threads keep dispatching
+    mgr = ReinstallManager(
+        art, recs, backend=backend,
+        cfg=ReinstallConfig(
+            threshold=THRESHOLD, cooldown_s=0.0, min_events=16,
+            # ~25% of the dense cell grid: below ~20 cells/dim the
+            # beam-survivor pool under-covers the skinny decode shapes
+            # and the budgeted model misprices them badly
+            install=InstallConfig(**base,
+                                  timing_budget=2400 if smoke else 8000)))
+    d_pre = mgr.drift()
+    shapes = [(int(m), int(k), int(n)) for m, k, n in eval_dims[:12]]
+    served = [0] * 4
+    errors: list = []
+    stop = threading.Event()
+
+    def hammer(tid: int) -> None:
+        while not stop.is_set():
+            try:
+                for i, (m, k, n) in enumerate(shapes):
+                    mgr.select(m, k, n, ROUTINES3[i % 3])
+                    served[tid] += 1
+                # decode-step cadence; a hard spin would just fight the
+                # background install for the GIL and stretch the swap
+                time.sleep(0.002)
+            except Exception as e:          # noqa: BLE001
+                errors.append(e)
+                return
+
+    threads = [threading.Thread(target=hammer, args=(t,))
+               for t in range(4)]
+    for t in threads:
+        t.start()
+    t0 = time.perf_counter()
+    fired = mgr.check()
+    mgr.wait()
+    wall = time.perf_counter() - t0
+    stop.set()
+    for t in threads:
+        t.join()
+
+    d_post = mgr.drift()
+    r_post = _regret(art, backend, eval_dims, names, t_best)
+
+    lines.append(f"reinstall_wall,{wall * 1e6:.0f},fire_to_swap")
+    lines.append(f"reinstall_served_during,{sum(served)},"
+                 f"dispatches_4threads")
+    lines.append(f"reinstall_drift_pre,{d_pre * 1e6:.0f},tv_x1e6")
+    lines.append(f"reinstall_drift_post,{d_post * 1e6:.0f},tv_x1e6")
+    lines.append(f"reinstall_regret_pre,{r_pre * 1e6:.0f},"
+                 f"regret_x1e6_on_shifted_mix")
+    lines.append(f"reinstall_regret_post,{r_post * 1e6:.0f},"
+                 f"regret_x1e6_on_shifted_mix")
+    lines.append(f"reinstall_regret_improvement,"
+                 f"{r_pre / max(r_post, 1e-9):.2f},x")
+    if smoke:
+        assert fired and mgr.swaps == 1 and mgr.last_error is None, (
+            f"closed loop did not complete: fired={fired} "
+            f"swaps={mgr.swaps} err={mgr.last_error!r}")
+        assert not errors and all(n > 0 for n in served), (
+            f"dispatches dropped during the swap: errors={errors[:3]}")
+        assert d_post < THRESHOLD, (
+            f"post-swap drift {d_post:.3f} not below {THRESHOLD}")
+        assert r_post < r_pre, (
+            f"post-swap regret {r_post:.4f} not below pre-swap "
+            f"{r_pre:.4f} on the shifted mix")
+    return lines
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv
+    for line in run(smoke=smoke):
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,12 +1,12 @@
 """Benchmark harness: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV and writes a machine-readable
-``BENCH_7.json`` (per-suite rows + medians, install wall-clock and the
+``BENCH_8.json`` (per-suite rows + medians, install wall-clock and the
 selected model's warm-tuner speedups) so the perf trajectory is tracked
 across PRs instead of scraped from logs.  Modules share a cached ADSALA
 install run per platform (benchmarks/common.py); ADSALA_BENCH_FULL=1
 raises the install budget to paper scale, ADSALA_BENCH_JSON overrides
-the JSON output path (default ``results/BENCH_7.json``).
+the JSON output path (default ``results/BENCH_8.json``).
 """
 
 from __future__ import annotations
@@ -85,6 +85,7 @@ def main() -> None:
         bench_install_vectorised,
         bench_model_selection,
         bench_predesigned,
+        bench_reinstall,
         bench_roofline,
         bench_routine_grid,
         bench_search,
@@ -97,6 +98,7 @@ def main() -> None:
         ("routine_grid", bench_routine_grid.run),
         ("search_harness", bench_search.run),
         ("workload_install", bench_workload_install.run),
+        ("reinstall_loop", bench_reinstall.run),
         ("dispatch_overhead", bench_dispatch_overhead.run),
         ("flash_attention", bench_flash.run),
         ("spec_derivation", bench_spec_derivation.run),
@@ -163,7 +165,7 @@ def main() -> None:
         failures += 1
         traceback.print_exc()
     out_path = os.environ.get("ADSALA_BENCH_JSON",
-                              os.path.join("results", "BENCH_7.json"))
+                              os.path.join("results", "BENCH_8.json"))
     os.makedirs(os.path.dirname(os.path.abspath(out_path)), exist_ok=True)
     with open(out_path, "w") as f:
         json.dump(bench_json, f, indent=1)

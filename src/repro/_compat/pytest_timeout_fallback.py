@@ -1,0 +1,94 @@
+"""SIGALRM-based stand-in for the ``pytest-timeout`` plugin.
+
+``pytest-timeout`` is declared in pyproject.toml's test extra and CI
+installs the real thing; the hermetic container cannot.  Without *some*
+enforcement, the deflake budgets on the subprocess-spawning suites
+(``tests/test_distributed.py``, the re-install fault-injection tests)
+are decoration — a wedged child process hangs the whole lane instead of
+failing one test.  This module implements the slice of the plugin the
+suite relies on:
+
+* ``--timeout=<seconds>`` / ``--timeout-method`` command-line options
+  (the method is accepted for CLI compatibility; only the signal
+  implementation exists here);
+* the ``@pytest.mark.timeout(N)`` marker, nearest-to-the-test wins,
+  ``timeout(0)`` disables;
+* per-test wall-clock enforcement via ``signal.setitimer`` — the test
+  fails with a ``Timeout >Ns`` error instead of hanging the run.
+
+Enforcement is skipped (budgets become inert annotations, as on
+Windows) when SIGALRM is unavailable or the run is not on the main
+thread — exactly the platforms the real plugin falls back to its
+thread method on.  tests/conftest.py registers this module as a plugin
+ONLY when the real ``pytest_timeout`` fails to import, so an
+environment with the package installed sees no behavior change.
+"""
+
+from __future__ import annotations
+
+import signal
+import threading
+from typing import Any
+
+import pytest
+
+__all__ = ["addoption"]
+
+
+def addoption(parser: Any) -> None:
+    """Split out of pytest_addoption so tests/conftest.py can delegate
+    (plugins registered from pytest_configure are too late for their
+    own addoption hook to run)."""
+    group = parser.getgroup("timeout-fallback")
+    group.addoption(
+        "--timeout", type=float, default=None,
+        help="default per-test timeout in seconds "
+             "(pytest-timeout fallback; 0 = disabled)")
+    group.addoption(
+        "--timeout-method", default="signal",
+        choices=("signal", "thread"),
+        help="accepted for pytest-timeout CLI compatibility; the "
+             "fallback only implements signal")
+
+
+def pytest_configure(config: Any) -> None:
+    config.addinivalue_line(
+        "markers",
+        "timeout(seconds): fail the test if it runs longer than the "
+        "wall-clock budget (pytest-timeout, or its signal-based "
+        "fallback when the plugin is not installed)")
+
+
+def _budget(item: Any) -> float | None:
+    marker = item.get_closest_marker("timeout")
+    if marker is not None and marker.args:
+        return float(marker.args[0])
+    if marker is not None and "seconds" in marker.kwargs:
+        return float(marker.kwargs["seconds"])
+    opt = item.config.getoption("--timeout", default=None)
+    return float(opt) if opt else None
+
+
+def _can_enforce() -> bool:
+    return (hasattr(signal, "SIGALRM")
+            and threading.current_thread() is threading.main_thread())
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_call(item: Any):
+    seconds = _budget(item)
+    if not seconds or seconds <= 0 or not _can_enforce():
+        yield
+        return
+
+    def on_alarm(signum: int, frame: Any) -> None:
+        pytest.fail(f"Timeout >{seconds:g}s (pytest-timeout fallback)",
+                    pytrace=False)
+
+    prev = signal.signal(signal.SIGALRM, on_alarm)
+    signal.setitimer(signal.ITIMER_REAL, seconds)
+    try:
+        yield
+    finally:
+        signal.setitimer(signal.ITIMER_REAL, 0.0)
+        signal.signal(signal.SIGALRM, prev)

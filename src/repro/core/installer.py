@@ -17,6 +17,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import shutil
 import time
 from typing import Any
 
@@ -41,6 +42,8 @@ __all__ = [
     "GatheredData", "InstallConfig", "ModelReport", "InstallReport",
     "gather_data", "install", "load_artifact", "default_config",
     "DEFAULT_WORKER_CONFIG",
+    "artifact_tmp_dir", "artifact_prev_dir", "is_artifact",
+    "commit_artifact", "rollback_artifact", "resolve_artifact",
 ]
 
 _PARTITIONS = ("M", "N", "K", "2D")
@@ -759,3 +762,114 @@ def load_artifact(artifact_dir: str) -> tuple[Any, PreprocessPipeline,
     pipe = PreprocessPipeline.from_dict(config["preprocess"])
     cands = [_config_from_dict(d) for d in config["candidates"]]
     return model, pipe, cands, config
+
+
+# ---------------------------------------------------------------------------
+# atomic artifact lifecycle (online re-install hot-swap + crash recovery)
+# ---------------------------------------------------------------------------
+#
+# The serving re-install loop (repro.serve.reinstall) writes a fresh
+# artifact under traffic, so the on-disk transition must be atomic in
+# the same write-to-tmp + commit-sentinel + rename style the checkpoint
+# layer uses (repro.ckpt.checkpoint, repro.ft.driver):
+#
+#     <dir>.tmp/      install() output, COMMIT sentinel written last
+#     <dir>/          live artifact (os.replace renames, never copies)
+#     <dir>.prev/     the displaced artifact, kept for one-call rollback
+#
+# A crash at any point leaves either the old artifact in place (tmp
+# dirs without COMMIT are ignored and swept on restart) or a recoverable
+# two-rename window that resolve_artifact() repairs.
+
+#: sentinel written into a tmp artifact dir after config.json +
+#: model.json are complete; commit_artifact refuses dirs without it
+ARTIFACT_COMMIT = "COMMIT"
+
+
+def artifact_tmp_dir(artifact_dir: str) -> str:
+    """Staging dir a re-install writes into before the atomic swap."""
+    return artifact_dir.rstrip(os.sep) + ".tmp"
+
+
+def artifact_prev_dir(artifact_dir: str) -> str:
+    """Where the displaced artifact lands on commit (rollback source)."""
+    return artifact_dir.rstrip(os.sep) + ".prev"
+
+
+def is_artifact(path: str) -> bool:
+    """True when ``path`` holds a loadable artifact (both paper files)."""
+    return (os.path.isfile(os.path.join(path, "config.json"))
+            and os.path.isfile(os.path.join(path, "model.json")))
+
+
+def commit_artifact(tmp_dir: str, artifact_dir: str) -> str | None:
+    """Atomically promote a committed tmp install to the live artifact.
+
+    Requires the :data:`ARTIFACT_COMMIT` sentinel (the writer stamps it
+    only after both artifact files are complete — a killed install never
+    has one, so a crashed tmp can never be promoted).  The displaced
+    artifact is retained at :func:`artifact_prev_dir` for rollback; its
+    previous occupant is deleted.  Returns the prev path, or None when
+    there was no artifact to displace.
+
+    Both transitions are single ``os.replace`` renames.  A hard crash
+    between them leaves no live dir but a complete ``.prev`` (and the
+    committed tmp) — :func:`resolve_artifact` repairs that window by
+    restoring ``.prev``, i.e. recovery always lands on a complete
+    artifact and never serves a half-written one.
+    """
+    if not os.path.isfile(os.path.join(tmp_dir, ARTIFACT_COMMIT)):
+        raise ValueError(
+            f"{tmp_dir} has no {ARTIFACT_COMMIT} sentinel — refusing to "
+            "promote a possibly half-written install")
+    if not is_artifact(tmp_dir):
+        raise ValueError(f"{tmp_dir} is not a complete artifact")
+    prev = artifact_prev_dir(artifact_dir)
+    displaced = None
+    if os.path.isdir(artifact_dir):
+        if os.path.isdir(prev):
+            shutil.rmtree(prev)
+        os.replace(artifact_dir, prev)
+        displaced = prev
+    os.replace(tmp_dir, artifact_dir)
+    return displaced
+
+
+def rollback_artifact(artifact_dir: str) -> None:
+    """Swap the live artifact with ``.prev`` (one-call rollback).
+
+    Pure renames — the restored artifact is byte-for-byte what commit
+    displaced.  The rolled-back artifact becomes the new ``.prev``, so
+    a second call rolls forward again.
+    """
+    prev = artifact_prev_dir(artifact_dir)
+    if not is_artifact(prev):
+        raise FileNotFoundError(f"no rollback artifact at {prev}")
+    hold = artifact_dir.rstrip(os.sep) + ".rollback"
+    if os.path.isdir(hold):
+        shutil.rmtree(hold)
+    had_live = os.path.isdir(artifact_dir)
+    if had_live:
+        os.replace(artifact_dir, hold)
+    os.replace(prev, artifact_dir)
+    if had_live:
+        os.replace(hold, prev)
+
+
+def resolve_artifact(artifact_dir: str) -> str | None:
+    """Crash recovery at boot: return a servable artifact path or None.
+
+    * A live artifact wins; any leftover ``.tmp`` (an install killed
+      mid-write OR one killed after COMMIT but before the swap) is
+      ignored and swept — an unpromoted install is an aborted install.
+    * No live artifact but a complete ``.prev``: the process died inside
+      commit_artifact's two-rename window — restore ``.prev``.
+    """
+    tmp = artifact_tmp_dir(artifact_dir)
+    if not is_artifact(artifact_dir):
+        prev = artifact_prev_dir(artifact_dir)
+        if is_artifact(prev):
+            os.replace(prev, artifact_dir)
+    if os.path.isdir(tmp):
+        shutil.rmtree(tmp)
+    return artifact_dir if is_artifact(artifact_dir) else None

@@ -27,6 +27,7 @@ tuner refuses rather than hand out gemm-quality picks for them.
 from __future__ import annotations
 
 import collections
+import threading
 import warnings
 from typing import Any, Iterable
 
@@ -141,6 +142,14 @@ class AdsalaTuner:
         self._cache: collections.OrderedDict[
             Key, tuple[GemmConfig, np.ndarray | None]] = \
             collections.OrderedDict()
+        # Guards the LRU dict + stats counters: serving threads hammer
+        # select/select_many while a background re-install swaps tuners
+        # (repro.serve.reinstall), and OrderedDict mutation is not safe
+        # under concurrent move_to_end/popitem.  Model prediction runs
+        # OUTSIDE the lock — concurrent selects never serialise on the
+        # expensive part, and a duplicated evaluation of the same key is
+        # benign (deterministic model, both writes agree).
+        self._lock = threading.RLock()
         self.stats = {"calls": 0, "cache_hits": 0, "evaluations": 0}
         # pre-built candidate feature columns (constant across calls)
         self._chips = np.asarray([c.n_chips for c in candidates], float)
@@ -250,14 +259,15 @@ class AdsalaTuner:
         """Seed the memo cache with (shape -> config) choices computed at
         install time (persisted in the artifact's ``warm_start`` block).
         Keys are ``(routine, m, k, n)``; bare 3-tuples mean gemm."""
-        for key, cfg in entries:
-            if len(key) == 3:
-                key = ("gemm", *key)
-            routine, m, k, n = key
-            key = self._key(m, k, n, routine)
-            self._cache[key] = (cfg, None)
-            self._cache.move_to_end(key)
-        self._evict()
+        with self._lock:
+            for key, cfg in entries:
+                if len(key) == 3:
+                    key = ("gemm", *key)
+                routine, m, k, n = key
+                key = self._key(m, k, n, routine)
+                self._cache[key] = (cfg, None)
+                self._cache.move_to_end(key)
+            self._evict()
 
     def _evict(self) -> None:
         while len(self._cache) > self.cache_size:
@@ -365,18 +375,31 @@ class AdsalaTuner:
         names = _normalise_routines(shapes, routines)
         keys = [self._key(m, k, n, r)
                 for (m, k, n), r in zip(shapes, names)]
-        self.stats["calls"] += len(keys)
-        missing: list[Key] = []
-        seen: set[Key] = set()
-        for key in keys:
-            if key not in self._cache and key not in seen:
-                seen.add(key)
-                missing.append(key)
         eff = search if search is not None else self.search_width
         if eff is True:
             eff = self.search_width or 8
+        # Pass 1 (locked): classify hits vs misses.  Hit configs are
+        # snapshotted immediately — a concurrent caller may evict them
+        # from the LRU before pass 2 re-acquires the lock.
+        hits: dict[Key, GemmConfig] = {}
+        missing: list[Key] = []
+        seen: set[Key] = set()
+        with self._lock:
+            self.stats["calls"] += len(keys)
+            for key in keys:
+                if key in self._cache:
+                    hits.setdefault(key, self._cache[key][0])
+                elif key not in seen:
+                    seen.add(key)
+                    missing.append(key)
+            if missing:
+                self.stats["evaluations"] += len(missing)
+        # Evaluate misses OUTSIDE the lock: the model predict is the
+        # expensive part and must not serialise concurrent serving
+        # threads (a racing thread may duplicate an evaluation of the
+        # same key — benign, the model is deterministic).
+        chosen: dict[Key, tuple[GemmConfig, np.ndarray | None]] = {}
         if missing:
-            self.stats["evaluations"] += len(missing)
             if eff:
                 res = beam_search(
                     np.asarray([k[1:] for k in missing], dtype=np.int64),
@@ -389,35 +412,90 @@ class AdsalaTuner:
                     # beam picks are not a row over self.candidates, so
                     # there is no times vector to memoise (None = lazy
                     # re-evaluation in select_with_times, like warm start)
-                    self._cache[key] = (cfgs[0], None)
+                    chosen[key] = (cfgs[0], None)
             else:
                 times = self.predicted_times_many(
                     [k[1:] for k in missing],
                     routines=[k[0] for k in missing])
                 best = np.argmin(times, axis=1)
                 for key, j, t in zip(missing, best, times):
-                    self._cache[key] = (self.candidates[int(j)], t)
+                    chosen[key] = (self.candidates[int(j)], t)
+        # Pass 2 (locked): publish evaluations, refresh LRU recency.
         out = []
         served: set[Key] = set()
-        for key in keys:
-            # every occurrence beyond the one that paid an evaluation is
-            # a cache hit, mirroring the scalar path's per-call counters
-            if key in seen and key not in served:
-                served.add(key)
-            else:
-                self.stats["cache_hits"] += 1
-            self._cache.move_to_end(key)
-            out.append(self._cache[key][0])
-        self._evict()
+        with self._lock:
+            for key, entry in chosen.items():
+                self._cache[key] = entry
+            for key in keys:
+                # every occurrence beyond the one that paid an
+                # evaluation is a cache hit, mirroring the scalar
+                # path's per-call counters
+                if key in seen and key not in served:
+                    served.add(key)
+                else:
+                    self.stats["cache_hits"] += 1
+                if key not in self._cache:
+                    # hit evicted by a concurrent caller between the
+                    # passes: reinsert the snapshot taken under lock
+                    self._cache[key] = (hits[key], None)
+                self._cache.move_to_end(key)
+                out.append(self._cache[key][0])
+            self._evict()
         return out
 
     def select_with_times(self, m: int, k: int, n: int,
                           routine: str = "gemm"
                           ) -> tuple[GemmConfig, np.ndarray]:
-        self.select(m, k, n, routine)     # populate cache + stats
         key = self._key(m, k, n, routine)
-        cfg, times = self._cache[key]
+        entry = None
+        for _ in range(4):         # concurrent eviction between the
+            self.select(m, k, n, routine)   # select and the read is
+            with self._lock:                # possible; retry (bounded)
+                entry = self._cache.get(key)
+            if entry is not None:
+                break
+        if entry is None:          # pathological thrash: compute direct
+            times = self.predicted_times(m, k, n, routine)
+            return self.candidates[int(np.argmin(times))], times
+        cfg, times = entry
         if times is None:          # warm-start entry: argmin only
             times = self.predicted_times(m, k, n, routine)
-            self._cache[key] = (cfg, times)
+            with self._lock:
+                self._cache[key] = (cfg, times)
         return cfg, times
+
+    # ------------------------------------------------------------------
+    def swap_from_artifact(self, artifact_dir: str, *,
+                           carry_warm: bool = True,
+                           **kw: Any) -> "AdsalaTuner":
+        """Build this tuner's replacement from a freshly installed
+        artifact (the in-memory half of an online re-install hot-swap).
+
+        Returns a NEW tuner — the caller publishes it with one reference
+        assignment (see :class:`repro.serve.reinstall.ReinstallManager`),
+        so in-flight selects finish on whichever tuner they started on
+        and a torn old/new mix is impossible.  The LRU cache lives
+        inside each instance, i.e. it is keyed per-artifact by
+        construction: no stale choice of the outgoing model can survive
+        into the replacement.
+
+        ``carry_warm`` transplants the *working set*, not the choices:
+        the outgoing cache's hot ``(routine, m, k, n)`` keys (filtered
+        to routines the new artifact has signal for) are re-selected
+        through the new model in one batched pass before the swap
+        becomes visible, so post-swap traffic starts on cache hits
+        without ever serving the old artifact's picks.
+        """
+        new = type(self).from_artifact(artifact_dir, **kw)
+        if carry_warm:
+            with self._lock:
+                hot = list(self._cache.keys())
+            hot = [key for key in hot if key[0] in new.routines]
+            if hot:
+                new.cache_size = max(new.cache_size,
+                                     len(new._cache) + len(hot))
+                new.select_many([key[1:] for key in hot],
+                                routines=[key[0] for key in hot])
+                new.stats = {"calls": 0, "cache_hits": 0,
+                             "evaluations": 0}
+        return new

@@ -264,15 +264,29 @@ class WorkloadProfile:
             log_space=log_space)
 
     # -- serve-side consumer -------------------------------------------
-    def drift(self, observed_mix: Mapping[str, float]) -> float:
-        """Total-variation distance between the installed routine mix
-        and an observed one (e.g. ``DispatchRecorder.routine_mix()``),
-        in [0, 1].  0 = identical mix, 1 = disjoint support."""
+    def drift(self, observed: "Mapping[str, float] | WorkloadProfile"
+              ) -> float:
+        """Total-variation distance between this (installed) profile and
+        an observed serving mix, in [0, 1].  0 = identical, 1 = disjoint
+        support; symmetric in its two distributions.
+
+        ``observed`` is either a bare routine mix (e.g.
+        ``DispatchRecorder.routine_mix()``) — routine-weight TV only —
+        or a full :class:`WorkloadProfile`, in which case the result is
+        the max of the routine-mix TV and the shape-cell-histogram TV
+        (when both profiles carry cells): a serving mix that kept its
+        routine split but moved to very different GEMM shapes has
+        drifted just as surely, and the re-install trigger
+        (:class:`repro.serve.reinstall.ReinstallManager`) must see it.
+        """
         p = _normalise(dict(self.routine_weights))
-        q = _normalise(dict(observed_mix))
-        keys = set(p) | set(q)
-        return 0.5 * sum(abs(p.get(r, 0.0) - q.get(r, 0.0))
-                         for r in keys)
+        if isinstance(observed, WorkloadProfile):
+            d = _tv(p, _normalise(dict(observed.routine_weights)))
+            if self.cells and observed.cells:
+                d = max(d, _tv(_normalise(dict(self.cells)),
+                               _normalise(dict(observed.cells))))
+            return d
+        return _tv(p, _normalise(dict(observed)))
 
     # -- serialisation -------------------------------------------------
     def to_dict(self) -> dict:
@@ -338,3 +352,13 @@ def _normalise(d: dict) -> dict:
     if total <= 0:
         return {}
     return {k: v / total for k, v in d.items()}
+
+
+def _tv(p: Mapping[Any, float], q: Mapping[Any, float]) -> float:
+    """Total-variation distance between two normalised distributions.
+
+    Clamped to 1.0: the float sum over near-disjoint supports can land
+    an epsilon above it, and drift is documented as in [0, 1].
+    """
+    return min(1.0, 0.5 * sum(abs(p.get(k, 0.0) - q.get(k, 0.0))
+                              for k in set(p) | set(q)))

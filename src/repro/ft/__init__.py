@@ -1,1 +1,10 @@
-"""Fault tolerance: checkpoint/restart driver, stragglers, preemption."""
+"""Fault tolerance: checkpoint/restart driver, stragglers, preemption.
+
+Import :class:`~repro.ft.driver.TrainDriver` from ``repro.ft.driver``
+(it pulls in jax via the checkpointer); the heartbeat helpers here are
+jax-free and shared with the serving re-install manager.
+"""
+
+from repro.ft.heartbeat import read_heartbeat, write_heartbeat
+
+__all__ = ["write_heartbeat", "read_heartbeat"]

@@ -31,6 +31,7 @@ from repro.ckpt.checkpoint import (
     latest_step,
     restore_checkpoint,
 )
+from repro.ft.heartbeat import write_heartbeat
 
 __all__ = ["DriverConfig", "TrainDriver"]
 
@@ -79,8 +80,7 @@ class TrainDriver:
 
     def _heartbeat(self) -> None:
         if self.cfg.heartbeat_path:
-            with open(self.cfg.heartbeat_path, "w") as f:
-                f.write(f"{self.step} {time.time()}")
+            write_heartbeat(self.cfg.heartbeat_path, self.step)
 
     # -- main loop ------------------------------------------------------------
     def run(self) -> dict:

@@ -52,6 +52,20 @@ def main() -> None:
                          "profiles (repro.launch.profile uses flops "
                          "weighting by default, and mixed weightings "
                          "refuse to merge)")
+    ap.add_argument("--reinstall", action="store_true",
+                    help="close the serving loop: watch live dispatch "
+                         "drift vs the installed workload profile and "
+                         "re-install + hot-swap the artifact in the "
+                         "background when it crosses the threshold "
+                         "(requires --artifact)")
+    ap.add_argument("--reinstall-threshold", type=float, default=0.25,
+                    help="drift (total variation, 0..1) that triggers "
+                         "a background re-install")
+    ap.add_argument("--reinstall-budget", type=int, default=2000,
+                    help="timing budget (cells) for each background "
+                         "re-install; keeps the online install cheap")
+    ap.add_argument("--reinstall-cooldown", type=float, default=300.0,
+                    help="minimum seconds between re-installs")
     args = ap.parse_args()
 
     cfg = (get_config if args.scale == "full"
@@ -59,15 +73,47 @@ def main() -> None:
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
+    from repro.kernels.recorder import DispatchRecorder
+
+    # separate recorders per traffic class: prefill and decode have very
+    # different shape profiles, and the re-install manager merges them
+    # volume-weighted so the install budget follows serving volume
+    recs = {"prefill": DispatchRecorder(), "decode": DispatchRecorder()}
+
     tuner = None
+    manager = None
     if args.artifact and os.path.isdir(args.artifact):
-        from repro.core import AdsalaTuner
-        tuner = AdsalaTuner.from_artifact(
-            args.artifact, search_width=args.search_width)
         mode = (f"beam search width {args.search_width}"
                 if args.search_width else "fixed-candidate argmin")
-        print(f"[serve] ADSALA tuner loaded from {args.artifact} "
-              f"({mode})")
+        if args.reinstall:
+            from repro.core.installer import InstallConfig
+            from repro.core.timing import SimulatedBackend
+            from repro.serve import ReinstallConfig, ReinstallManager
+            manager = ReinstallManager(
+                args.artifact, recs,
+                backend=SimulatedBackend(seed=0),
+                cfg=ReinstallConfig(
+                    threshold=args.reinstall_threshold,
+                    cooldown_s=args.reinstall_cooldown,
+                    min_events=8,
+                    install=InstallConfig(
+                        n_samples=160, repeats=2,
+                        models=("lightgbm",),
+                        timing_budget=args.reinstall_budget)),
+                search_width=args.search_width)
+            tuner = manager
+            print(f"[serve] ADSALA tuner loaded from {args.artifact} "
+                  f"({mode}); online re-install armed at drift > "
+                  f"{args.reinstall_threshold}")
+        else:
+            from repro.core import AdsalaTuner
+            tuner = AdsalaTuner.from_artifact(
+                args.artifact, search_width=args.search_width)
+            print(f"[serve] ADSALA tuner loaded from {args.artifact} "
+                  f"({mode})")
+    elif args.reinstall:
+        raise SystemExit("--reinstall requires --artifact pointing at "
+                         "an installed ADSALA artifact")
 
     cache_len = args.prompt_len + args.gen_tokens
     pctx = make_ctx(None, "prefill", cache_len=cache_len, remat=False,
@@ -88,12 +134,10 @@ def main() -> None:
     decode = jax.jit(lambda p, tok, c, pos: model.decode_step(
         p, tok, c, pos, dctx))
 
-    from repro.kernels.recorder import DispatchRecorder
-
     t0 = time.perf_counter()
-    # the recorder observes the trace-time dispatches of both steps:
+    # the recorders observe the trace-time dispatches of both steps:
     # which routine every contraction was tagged as, per call site
-    with DispatchRecorder() as rec:
+    with recs["prefill"]:
         logits, cache = prefill(params, prompts)
         logits.block_until_ready()
     t_prefill = time.perf_counter() - t0
@@ -112,11 +156,15 @@ def main() -> None:
     generated = [toks]
     t0 = time.perf_counter()
     for i in range(args.gen_tokens - 1):
-        with rec:                   # decode dispatches trace on step 0
+        with recs["decode"]:        # decode dispatches trace on step 0
             logits, cache = decode(params, toks,
                                    cache, jnp.int32(args.prompt_len + i))
         toks = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         generated.append(toks)
+        if manager is not None and manager.check():
+            print(f"[serve] drift {manager.last_drift:.3f} crossed "
+                  f"{args.reinstall_threshold} at decode step {i}: "
+                  "background re-install launched (serving continues)")
     jax.block_until_ready(generated[-1])
     t_decode = time.perf_counter() - t0
 
@@ -126,12 +174,28 @@ def main() -> None:
           f"prefill {args.prompt_len} toks in {t_prefill*1e3:.1f}ms, "
           f"decoded {args.gen_tokens} toks at {tps:.1f} tok/s")
     print(f"[serve] sample continuation ids: {out[0, :8].tolist()}")
+    # combined view across traffic classes for reporting / --profile-out
+    rec = DispatchRecorder()
+    for r in recs.values():
+        rec.events.extend(r.events)
     mix = rec.routine_mix(by="events")
     if mix:
         pretty = " ".join(f"{r}={f:.2f}" for r, f in mix.items())
         print(f"[serve] dispatch routine mix (by events): {pretty} "
               f"over {len(rec.events)} traced events")
-    if tuner is not None:
+    if manager is not None:
+        if manager.installing:
+            print("[serve] waiting for the background re-install...")
+        manager.wait()
+        if manager.last_error is not None:
+            print(f"[serve] re-install failed (old artifact still "
+                  f"serving): {manager.last_error!r}")
+        drift = manager.drift()
+        print(f"[serve] tuner stats: {tuner.stats}")
+        print(f"[serve] re-install: fires={manager.fires} "
+              f"swaps={manager.swaps} post-swap drift="
+              f"{'n/a' if drift is None else format(drift, '.3f')}")
+    elif tuner is not None:
         print(f"[serve] tuner stats: {tuner.stats}")
         # compare the live mix against the profile the install grid was
         # weighted by (same weighting the profile was built with)

@@ -1,1 +1,15 @@
-"""Serving substrate: prefill/decode builders, cache sharding."""
+"""Serving substrate: prefill/decode builders, cache sharding, and the
+drift-triggered online re-install loop.
+
+``repro.serve.step`` pulls in jax; the re-install manager below is
+jax-free on purpose (it runs against the simulated/measured timing
+backends), so it is safe to re-export eagerly.
+"""
+
+from repro.serve.reinstall import (
+    DriftTrigger,
+    ReinstallConfig,
+    ReinstallManager,
+)
+
+__all__ = ["DriftTrigger", "ReinstallConfig", "ReinstallManager"]

@@ -8,6 +8,11 @@
   real package is missing, a deterministic fixed-seed fallback
   (repro._compat.hypothesis_fallback) fills the import so the four
   property-test modules still collect and run.
+* ``pytest-timeout`` is likewise declared but not installable here;
+  when missing, a SIGALRM fallback plugin
+  (repro._compat.pytest_timeout_fallback) enforces the suite's
+  ``--timeout`` / ``@pytest.mark.timeout`` budgets so a wedged
+  subprocess test fails instead of hanging the lane.
 """
 
 import dataclasses
@@ -25,6 +30,24 @@ except ModuleNotFoundError:
     from repro._compat import hypothesis_fallback
 
     hypothesis_fallback.install()
+
+try:
+    import pytest_timeout  # noqa: F401
+
+    _timeout_fallback = None
+except ModuleNotFoundError:
+    from repro._compat import pytest_timeout_fallback as _timeout_fallback
+
+
+def pytest_addoption(parser):
+    if _timeout_fallback is not None:
+        _timeout_fallback.addoption(parser)
+
+
+def pytest_configure(config):
+    if _timeout_fallback is not None:
+        config.pluginmanager.register(_timeout_fallback,
+                                      "timeout-fallback")
 
 
 @dataclasses.dataclass

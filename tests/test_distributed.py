@@ -18,7 +18,10 @@ import textwrap
 
 import pytest
 
-pytestmark = pytest.mark.slow
+# per-test wall budget: the subprocess itself is capped at 420 s below,
+# so 480 s only triggers when the parent wedges outside subprocess.run
+# (enforced by pytest-timeout, or its signal fallback in conftest)
+pytestmark = [pytest.mark.slow, pytest.mark.timeout(480)]
 
 _FULL = ((os.cpu_count() or 1) > 2
          or os.environ.get("ADSALA_DIST_FULL") == "1")

@@ -1,0 +1,291 @@
+"""Closed-loop serving: drift-triggered re-install + atomic hot-swap.
+
+Covers the ISSUE-8 acceptance path end to end (serve a recorded mix,
+shift it past the drift threshold, background re-install fires exactly
+once, the artifact swap is atomic with zero dropped dispatches, and
+rollback restores the previous artifact byte-for-byte), plus fault
+injection: the background install is killed at each phase and the live
+tuner must keep serving the old artifact with on-disk state intact.
+"""
+
+import hashlib
+import os
+import shutil
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.costmodel import GemmConfig
+from repro.core.installer import (
+    ARTIFACT_COMMIT,
+    InstallConfig,
+    artifact_prev_dir,
+    artifact_tmp_dir,
+    commit_artifact,
+    install,
+    is_artifact,
+    resolve_artifact,
+)
+from repro.core.timing import SimulatedBackend
+from repro.core.tuner import AdsalaTuner
+from repro.core.workload import WorkloadProfile
+from repro.kernels.recorder import DispatchEvent, DispatchRecorder
+from repro.serve import ReinstallConfig, ReinstallManager
+
+pytestmark = pytest.mark.timeout(180)
+
+_INSTALL = dict(n_samples=48, repeats=1, routines=("gemm", "syrk"),
+                models=("decision_tree",), tile_ids=(0, 1, 3))
+#: budget-capped template the manager re-installs with
+_REINSTALL_CFG = InstallConfig(timing_budget=200, **_INSTALL)
+
+
+def _synthetic_recorder(routine: str, lo: int, hi: int, n: int, *,
+                        seed: int) -> DispatchRecorder:
+    rec = DispatchRecorder()
+    rng = np.random.default_rng(seed)
+    for _ in range(n):
+        m, k, nn = (int(x) for x in rng.integers(lo, hi, 3))
+        rec.events.append(DispatchEvent(routine=routine, m=m, k=k, n=nn,
+                                        site="synthetic"))
+    return rec
+
+
+def _dir_digest(d: str) -> str:
+    h = hashlib.sha256()
+    for name in sorted(os.listdir(d)):
+        h.update(name.encode())
+        with open(os.path.join(d, name), "rb") as f:
+            h.update(f.read())
+    return h.hexdigest()
+
+
+@pytest.fixture(scope="session")
+def _artifact_src(tmp_path_factory):
+    """One real install (gemm-heavy small-shape profile), copied per
+    test so swaps/rollbacks never leak between tests."""
+    src = tmp_path_factory.mktemp("reinstall") / "artifact"
+    prof = WorkloadProfile.from_recorder(
+        _synthetic_recorder("gemm", 64, 512, 64, seed=11))
+    install(SimulatedBackend(seed=0),
+            InstallConfig(workload=prof, **_INSTALL),
+            artifact_dir=str(src))
+    return src
+
+
+@pytest.fixture
+def artifact(tmp_path, _artifact_src) -> str:
+    dst = tmp_path / "artifact"
+    shutil.copytree(_artifact_src, dst)
+    return str(dst)
+
+
+def _shifted_recorder(seed: int = 7) -> DispatchRecorder:
+    """Serving mix disjoint from the installed profile: syrk-only and
+    an order of magnitude larger shapes -> drift ~1."""
+    return _synthetic_recorder("syrk", 2048, 8192, 128, seed=seed)
+
+
+def _manager(artifact: str, rec, clock, **cfg_kw) -> ReinstallManager:
+    kw = dict(threshold=0.25, hysteresis=0.05, cooldown_s=60.0,
+              min_events=16, install=_REINSTALL_CFG)
+    kw.update(cfg_kw)
+    return ReinstallManager(artifact, rec,
+                            backend=SimulatedBackend(seed=0),
+                            cfg=ReinstallConfig(**kw),
+                            clock=lambda: clock[0])
+
+
+# ---------------------------------------------------------------------------
+# E2E acceptance: shift -> fire once -> swap under traffic -> recover
+# ---------------------------------------------------------------------------
+
+def test_e2e_drift_triggers_swap_under_traffic(artifact, tmp_path):
+    clock = [0.0]
+    hb = str(tmp_path / "reinstall.hb")
+    mgr = _manager(artifact, {"decode": _shifted_recorder()}, clock,
+                   heartbeat_path=hb)
+
+    shapes = [(int(m), int(k), int(n)) for m, k, n in
+              np.random.default_rng(5).integers(128, 4096, (8, 3))]
+    errors: list = []
+    served = [0] * 4
+    stop = threading.Event()
+
+    def hammer(tid: int) -> None:
+        while not stop.is_set():
+            try:
+                for i, (m, k, n) in enumerate(shapes):
+                    r = ("gemm", "syrk")[i % 2]
+                    assert isinstance(mgr.select(m, k, n, r), GemmConfig)
+                    served[tid] += 1
+                for c in mgr.select_many(shapes, routines="syrk"):
+                    assert isinstance(c, GemmConfig)
+                    served[tid] += 1
+            except Exception as e:          # noqa: BLE001
+                errors.append(e)
+                return
+
+    threads = [threading.Thread(target=hammer, args=(t,))
+               for t in range(4)]
+    for t in threads:
+        t.start()
+    try:
+        assert mgr.drift() > 0.9            # disjoint mix, before fire
+        assert mgr.check()                  # fires
+        assert not mgr.check()              # exactly once: in flight
+        assert mgr.wait(timeout=120)
+        assert mgr.last_error is None
+        assert mgr.swaps == 1 and mgr.fires == 1
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+
+    assert not errors                       # zero dropped dispatches
+    assert all(n > 0 for n in served)       # every thread kept serving
+    # the re-install was mix-weighted by the live profile: drift closes
+    assert mgr.drift() < 0.25
+    # on disk: new artifact live, old retained for rollback
+    assert is_artifact(artifact)
+    assert os.path.exists(os.path.join(artifact, ARTIFACT_COMMIT))
+    assert is_artifact(artifact_prev_dir(artifact))
+    assert not os.path.isdir(artifact_tmp_dir(artifact))
+    # below threshold now -> no re-fire, regardless of cooldown
+    clock[0] += 1e6
+    assert not mgr.check() and mgr.fires == 1
+    # the install stamped its phases into the liveness beacon (the ft
+    # heartbeat idiom) and parked on "idle" after the swap
+    from repro.ft import read_heartbeat
+    assert read_heartbeat(hb)[0] == "idle"
+
+
+def test_swap_keys_reselected_through_new_model(artifact):
+    """Warm-start carry-over is per-artifact: hot *keys* survive a swap
+    but their configs must equal what the new artifact would choose
+    fresh — never the old tuner's cached choices."""
+    clock = [0.0]
+    mgr = _manager(artifact, {"all": _shifted_recorder()}, clock)
+    keys = [(256, 256, 256), (1024, 512, 2048), (64, 4096, 64)]
+    for m, k, n in keys:
+        mgr.select(m, k, n, "syrk")
+    assert mgr.check() and mgr.wait(timeout=120) and mgr.swaps == 1
+    fresh = AdsalaTuner.from_artifact(artifact)
+    for m, k, n in keys:
+        assert mgr.peek(m, k, n, "syrk")    # key carried over (warm)
+        assert mgr.select(m, k, n, "syrk") == fresh.select(m, k, n, "syrk")
+
+
+# ---------------------------------------------------------------------------
+# fault injection: kill the background install at every phase
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("phase", ["gather", "fit", "write", "commit"])
+def test_install_killed_mid_phase_keeps_serving(artifact, phase):
+    clock = [0.0]
+    before = _dir_digest(artifact)
+    rec = _shifted_recorder()
+    mgr = _manager(artifact, rec, clock)
+
+    def bomb(p: str) -> None:
+        if p == phase:
+            raise RuntimeError(f"killed@{p}")
+
+    mgr._phase_hook = bomb
+    pre = mgr.select(512, 512, 512, "gemm")
+    assert mgr.check() and mgr.wait(timeout=120)
+    assert f"killed@{phase}" in repr(mgr.last_error)
+    assert mgr.swaps == 0
+
+    # the live tuner never noticed: same artifact, same choices
+    assert mgr.select(512, 512, 512, "gemm") == pre
+    assert _dir_digest(artifact) == before
+    assert not os.path.isdir(artifact_prev_dir(artifact))
+
+    tmp = artifact_tmp_dir(artifact)
+    if phase == "write":
+        # killed after the artifact files, before the sentinel: the tmp
+        # is on disk but uncommitted — promotion must refuse it
+        assert os.path.isdir(tmp)
+        assert not os.path.exists(os.path.join(tmp, ARTIFACT_COMMIT))
+        with pytest.raises(ValueError):
+            commit_artifact(tmp, artifact)
+
+    # restart: boot resolution keeps the live artifact, sweeps debris
+    assert resolve_artifact(artifact) == artifact
+    assert not os.path.isdir(tmp)
+    assert _dir_digest(artifact) == before
+    mgr2 = _manager(artifact, rec, clock)
+    assert mgr2.select(512, 512, 512, "gemm") == pre
+
+
+def test_mid_commit_crash_window_recovers(artifact):
+    """Crash between commit's two renames: live dir gone, .prev holds
+    the old artifact.  resolve_artifact restores it and the manager
+    boots as if nothing happened."""
+    pre = AdsalaTuner.from_artifact(artifact).select(512, 512, 512)
+    before = _dir_digest(artifact)
+    os.replace(artifact, artifact_prev_dir(artifact))
+    assert resolve_artifact(artifact) == artifact
+    assert _dir_digest(artifact) == before
+    mgr = _manager(artifact, _shifted_recorder(), [0.0])
+    assert mgr.select(512, 512, 512, "gemm") == pre
+
+
+def test_boot_refuses_missing_artifact(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        ReinstallManager(str(tmp_path / "nope"), DispatchRecorder())
+
+
+# ---------------------------------------------------------------------------
+# rollback
+# ---------------------------------------------------------------------------
+
+def test_rollback_restores_prev_byte_for_byte(artifact):
+    clock = [0.0]
+    mgr = _manager(artifact, {"all": _shifted_recorder()}, clock)
+    before = _dir_digest(artifact)
+    pre = mgr.select(512, 512, 512, "gemm")
+
+    assert mgr.check() and mgr.wait(timeout=120) and mgr.swaps == 1
+    assert _dir_digest(artifact) != before  # new artifact is live
+
+    mgr.rollback()
+    assert _dir_digest(artifact) == before  # byte-for-byte restore
+    assert mgr.select(512, 512, 512, "gemm") == pre
+    # the displaced (new) artifact sits in .prev: rollback is symmetric
+    assert is_artifact(artifact_prev_dir(artifact))
+
+
+# ---------------------------------------------------------------------------
+# guards
+# ---------------------------------------------------------------------------
+
+def test_min_events_guard_blocks_noise(artifact):
+    clock = [0.0]
+    rec = _synthetic_recorder("syrk", 2048, 8192, 4, seed=1)  # 4 events
+    mgr = _manager(artifact, rec, clock, min_events=16)
+    assert mgr.drift() > 0.9                # drifted, but too few events
+    assert not mgr.check() and mgr.fires == 0
+
+
+def test_uniform_artifact_never_fires(tmp_path):
+    """No installed workload profile -> drift undefined -> no fire."""
+    art = str(tmp_path / "uniform")
+    install(SimulatedBackend(seed=0), InstallConfig(**_INSTALL),
+            artifact_dir=art)
+    mgr = _manager(art, _shifted_recorder(), [0.0])
+    assert mgr.drift() is None
+    assert not mgr.check() and mgr.fires == 0
+
+
+def test_stale_tmp_swept_and_commit_refused(artifact):
+    tmp = artifact_tmp_dir(artifact)
+    os.makedirs(tmp)
+    with open(os.path.join(tmp, "config.json"), "w") as f:
+        f.write("{}")                       # partial write, no model
+    with pytest.raises(ValueError):
+        commit_artifact(tmp, artifact)
+    assert resolve_artifact(artifact) == artifact
+    assert not os.path.isdir(tmp)           # debris swept at boot

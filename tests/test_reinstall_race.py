@@ -1,0 +1,150 @@
+"""Hammer select/select_many from N threads while artifact swaps fire.
+
+The atomicity contract of :class:`repro.serve.ReinstallManager`: every
+dispatch is served entirely by ONE artifact's tuner.  Two artifacts are
+installed with disjoint tile sets, so their per-key choices are
+distinguishable; reader threads hammer the manager while the main
+thread fires swaps between them, and every observed config must be the
+old artifact's choice or the new one's — never a third value, and
+never a batch mixing the two (a torn swap).  Caches are per-artifact:
+after the final swap the served configs equal a fresh load of the
+final artifact, byte-for-byte of its choices.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.installer import InstallConfig, install
+from repro.core.timing import SimulatedBackend
+from repro.core.tuner import AdsalaTuner
+from repro.kernels.recorder import DispatchRecorder
+from repro.serve import ReinstallManager
+
+pytestmark = pytest.mark.timeout(300)
+
+#: disjoint tile sets -> the two artifacts choose from disjoint
+#: candidate pools, so "which artifact served this?" is decidable
+_TILES_A = (0, 1, 2)
+_TILES_B = (5, 6, 7)
+
+KEYS = [(int(m), int(k), int(n)) for m, k, n in
+        np.random.default_rng(17).integers(128, 8192, (10, 3))]
+ROUTINES_CYCLE = ["gemm", "syrk"] * 5
+
+
+@pytest.fixture(scope="module")
+def arts(tmp_path_factory):
+    root = tmp_path_factory.mktemp("race")
+    dirs = {}
+    for name, tiles in (("a", _TILES_A), ("b", _TILES_B)):
+        d = str(root / name)
+        install(SimulatedBackend(seed=0),
+                InstallConfig(n_samples=48, repeats=1,
+                              routines=("gemm", "syrk"),
+                              models=("decision_tree",),
+                              tile_ids=tiles, seed=3),
+                artifact_dir=d)
+        dirs[name] = d
+    return dirs
+
+
+def _choices(artifact: str) -> dict:
+    t = AdsalaTuner.from_artifact(artifact)
+    return {(r, m, k, n): t.select(m, k, n, r)
+            for (m, k, n), r in zip(KEYS, ROUTINES_CYCLE)}
+
+
+def test_swaps_under_select_hammer_never_tear(arts):
+    choice = {name: _choices(d) for name, d in arts.items()}
+    keys = list(choice["a"])
+    # the contract test needs distinguishable artifacts
+    differing = [k for k in keys if choice["a"][k] != choice["b"][k]]
+    assert differing, "artifacts with disjoint tiles chose identically"
+
+    mgr = ReinstallManager(arts["a"], DispatchRecorder(),
+                           backend=SimulatedBackend(seed=0))
+    errors: list = []
+    torn: list = []
+    stop = threading.Event()
+    n_batches = [0] * 6
+
+    def hammer(tid: int) -> None:
+        rng = np.random.default_rng(tid)
+        while not stop.is_set():
+            try:
+                if tid % 2 == 0:
+                    # single selects: observed value must belong to one
+                    # of the two artifacts' choice sets
+                    i = int(rng.integers(len(KEYS)))
+                    r, m, k, n = keys[i]
+                    got = mgr.select(m, k, n, r)
+                    if got not in (choice["a"][keys[i]],
+                                   choice["b"][keys[i]]):
+                        torn.append((keys[i], got))
+                else:
+                    # batched: the WHOLE batch must be served by a
+                    # single artifact — half-and-half is a torn swap
+                    got = mgr.select_many(KEYS, routines=ROUTINES_CYCLE)
+                    for src in ("a", "b"):
+                        if all(g == choice[src][k]
+                               for g, k in zip(got, keys)):
+                            break
+                    else:
+                        torn.append(("batch", got))
+                n_batches[tid] += 1
+            except Exception as e:          # noqa: BLE001
+                errors.append(e)
+                return
+
+    threads = [threading.Thread(target=hammer, args=(t,))
+               for t in range(6)]
+    for t in threads:
+        t.start()
+    try:
+        for i in range(12):                # 12 live swaps under fire,
+            mgr.swap_now(arts["a"] if i % 2 == 0 else arts["b"])  # ending on B
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+
+    assert not errors
+    assert not torn, f"torn dispatches observed: {torn[:3]}"
+    assert all(n > 0 for n in n_batches)
+    assert mgr.swaps == 12
+
+    # final artifact is B: post-swap selects equal a fresh B load —
+    # the cache is keyed per artifact, old choices never leak through
+    for key in keys:
+        r, m, k, n = key
+        assert mgr.select(m, k, n, r) == choice["b"][key]
+
+
+def test_warm_carry_reselects_not_copies(arts):
+    """The warm-start transplant re-evaluates hot keys through the NEW
+    model; for keys where the artifacts disagree, serving the old
+    choice after a swap would be a cache-leak bug."""
+    mgr = ReinstallManager(arts["a"], DispatchRecorder(),
+                           backend=SimulatedBackend(seed=0))
+    choice_a, choice_b = _choices(arts["a"]), _choices(arts["b"])
+    for (r, m, k, n), want in choice_a.items():
+        assert mgr.select(m, k, n, r) == want
+    mgr.swap_now(arts["b"])
+    for (r, m, k, n), want in choice_b.items():
+        assert mgr.peek(m, k, n, r)         # hot set carried over
+        assert mgr.select(m, k, n, r) == want
+
+
+def test_stats_are_per_artifact_instance(arts):
+    mgr = ReinstallManager(arts["a"], DispatchRecorder(),
+                           backend=SimulatedBackend(seed=0))
+    for (m, k, n), r in zip(KEYS, ROUTINES_CYCLE):
+        mgr.select(m, k, n, r)
+        mgr.select(m, k, n, r)              # memo hit on the old tuner
+    assert mgr.stats["cache_hits"] > 0
+    old_stats = mgr.stats
+    mgr.swap_now(arts["b"])
+    assert mgr.stats is not old_stats       # fresh instance, fresh LRU
+    assert mgr.stats["cache_hits"] == 0

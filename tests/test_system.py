@@ -8,7 +8,10 @@ import pytest
 
 from repro.core import AdsalaTuner, GemmConfig, ROUTINES
 
-pytestmark = pytest.mark.slow
+# generous per-test wall budget: the session-scoped install fixture can
+# take minutes on a cold 2-core container, but a wedge should fail the
+# test, not hang the slow lane
+pytestmark = [pytest.mark.slow, pytest.mark.timeout(900)]
 
 
 def test_install_produces_two_files(tiny_artifact):
