@@ -49,7 +49,8 @@ __all__ = [
     "TP_AXIS", "MODEL_AXIS_RULES", "DATA_AXIS_RULES",
     "abstract_mesh", "auto_spec", "batch_specs", "data_axes",
     "divisible_axes", "is_partition_spec", "logical_axis_dims",
-    "named_shardings", "param_rules", "partition_params", "state_specs",
+    "named_shardings", "paged_spec", "param_rules", "partition_params",
+    "state_specs",
 ]
 
 #: the tensor-parallel mesh axis name (repro.launch.mesh convention)
@@ -163,6 +164,35 @@ def auto_spec(shape: Sequence[int], mesh, batch_dim: int = 0
         best = -1
         for i, d in enumerate(shape):
             if i == batch_dim or tp < 2 or d % tp:
+                continue
+            if best < 0 or d > shape[best]:
+                best = i
+        if best >= 0:
+            entries[best] = TP_AXIS
+    return PartitionSpec(*entries)
+
+
+def paged_spec(shape: Sequence[int], mesh, page_dim: int = 0
+               ) -> PartitionSpec:
+    """Spec for a paged KV pool — 2D (data x model) on one array.
+
+    Page pools (:mod:`repro.serve.kv_cache`) carry no batch dim: the
+    *page* dim is the parallel one, so it takes the data axes (demoted
+    until they divide).  Tensor parallelism goes to the largest
+    remaining dim divisible by 'model' — excluding the page-offset dim
+    at ``page_dim + 1``: token slots within a page must stay whole on
+    every shard or the page-table gather/scatter stops being local.
+    Scan-stacked pools pass ``page_dim=1`` (dim 0 is the repeat dim,
+    replicated like the 'layers' logical axis).
+    """
+    entries: list[Any] = [None] * len(shape)
+    entries[page_dim] = divisible_axes(shape[page_dim], data_axes(mesh),
+                                       mesh)
+    if TP_AXIS in mesh.axis_names:
+        tp = mesh.shape[TP_AXIS]
+        best = -1
+        for i, d in enumerate(shape):
+            if i in (page_dim, page_dim + 1) or tp < 2 or d % tp:
                 continue
             if best < 0 or d > shape[best]:
                 best = i

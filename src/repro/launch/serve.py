@@ -35,6 +35,19 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-tokens", type=int, default=16)
+    ap.add_argument("--queue", action="store_true",
+                    help="trace-driven continuous batching: serve a "
+                         "ragged request queue (prompt lengths up to "
+                         "--prompt-len, outputs up to --gen-tokens) "
+                         "through the paged-KV scheduler instead of "
+                         "one fixed batch")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode slots (batch width) in --queue mode")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="KV page size (token slots) in --queue mode")
+    ap.add_argument("--kv-pages", type=int, default=None,
+                    help="total KV pages in the shared pool (default: "
+                         "2x worst case for --slots sequences)")
     ap.add_argument("--artifact", default=None,
                     help="ADSALA artifact dir (tuner enabled when set)")
     ap.add_argument("--search-width", type=int, default=None,
@@ -115,6 +128,10 @@ def main() -> None:
         raise SystemExit("--reinstall requires --artifact pointing at "
                          "an installed ADSALA artifact")
 
+    if args.queue:
+        _serve_queue(args, cfg, model, params, tuner, manager, recs)
+        return
+
     cache_len = args.prompt_len + args.gen_tokens
     pctx = make_ctx(None, "prefill", cache_len=cache_len, remat=False,
                     tuner=tuner)
@@ -174,6 +191,14 @@ def main() -> None:
           f"prefill {args.prompt_len} toks in {t_prefill*1e3:.1f}ms, "
           f"decoded {args.gen_tokens} toks at {tps:.1f} tok/s")
     print(f"[serve] sample continuation ids: {out[0, :8].tolist()}")
+    _report_tail(args, cfg, recs, tuner, manager)
+
+
+def _report_tail(args, cfg, recs, tuner, manager) -> None:
+    """Shared post-run reporting: routine mix, tuner/re-install stats,
+    optional --profile-out — identical for fixed-batch and --queue."""
+    from repro.kernels.recorder import DispatchRecorder
+
     # combined view across traffic classes for reporting / --profile-out
     rec = DispatchRecorder()
     for r in recs.values():
@@ -215,11 +240,61 @@ def main() -> None:
         prof = WorkloadProfile.from_recorder(
             rec, by=args.profile_by,
             source={"kind": "serve", "arch": cfg.name,
+                    "queue": bool(args.queue),
                     "requests": args.requests,
                     "prompt_len": args.prompt_len,
                     "gen_tokens": args.gen_tokens})
         prof.save(args.profile_out)
         print(f"[serve] workload profile written to {args.profile_out}")
+
+
+def _serve_queue(args, cfg, model, params, tuner, manager, recs) -> None:
+    """Trace-driven continuous batching: ragged requests through the
+    paged-KV scheduler, re-install drift checks riding the step hook."""
+    import numpy as np
+
+    from repro.serve.kv_cache import pages_for
+    from repro.serve.scheduler import ContinuousBatchingScheduler
+
+    max_seq = args.prompt_len + args.gen_tokens
+    worst = pages_for(max_seq, args.page_size)
+    n_pages = (args.kv_pages if args.kv_pages is not None
+               else 2 * args.slots * worst)
+    sched = ContinuousBatchingScheduler(
+        model, cfg, params, slots=args.slots, n_pages=n_pages,
+        page_size=args.page_size, max_seq_len=max_seq, tuner=tuner,
+        recorders=recs)
+
+    rng = np.random.default_rng(1)
+    for _ in range(args.requests):
+        length = int(rng.integers(max(2, args.prompt_len // 4),
+                                  args.prompt_len + 1))
+        new = int(rng.integers(max(1, args.gen_tokens // 4),
+                               args.gen_tokens + 1))
+        sched.submit(rng.integers(0, cfg.vocab, length).tolist(), new)
+
+    def on_step(s):
+        if manager is not None and manager.check():
+            print(f"[serve] drift {manager.last_drift:.3f} crossed the "
+                  f"threshold at decode step {s.steps}: background "
+                  "re-install launched (serving continues)")
+
+    t0 = time.perf_counter()
+    finished = sched.run_until_drained(on_step=on_step)
+    wall = time.perf_counter() - t0
+
+    toks = sum(len(f.tokens) for f in finished.values())
+    tps = toks / max(wall, 1e-9)
+    print(f"[serve] {cfg.name}: {len(finished)} requests via "
+          f"continuous batching ({args.slots} slots, {n_pages} pages x "
+          f"{args.page_size} tokens), {toks} tokens in {wall*1e3:.1f}ms "
+          f"({tps:.1f} tok/s), goodput {sched.goodput():.3f} "
+          f"tok/slot-step over {sched.steps} steps")
+    sample = min(finished)
+    print(f"[serve] sample continuation ids: "
+          f"{list(finished[sample].tokens)[:8]}")
+    sched.alloc.check()
+    _report_tail(args, cfg, recs, tuner, manager)
 
 
 if __name__ == "__main__":

@@ -23,6 +23,7 @@ __all__ = [
     "linear", "mlp_defs", "apply_mlp",
     "rope_angles", "apply_rope",
     "attention_defs", "attention_train", "attention_decode",
+    "attention_decode_paged",
     "AttnSpec", "KVCache", "init_kv_cache", "seed_kv_cache",
 ]
 
@@ -112,7 +113,9 @@ def rope_angles(positions: jax.Array, dim: int,
 def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array,
                fraction: float = 1.0) -> jax.Array:
     """Rotate the first ``fraction`` of the head dim; x: (B, S, H, Dh),
-    sin/cos: (S, rot/2) or broadcastable."""
+    sin/cos: (S, rot/2) — or (B, S, rot/2) when every sequence in the
+    batch sits at its own position (the continuous-batching paged
+    decode path, where positions are (B, S))."""
     dh = x.shape[-1]
     rot = int(dh * fraction)
     rot -= rot % 2
@@ -120,8 +123,12 @@ def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array,
         return x
     xr, xp = x[..., :rot], x[..., rot:]
     x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
-    sin_ = sin[None, :, None, : rot // 2].astype(jnp.float32)
-    cos_ = cos[None, :, None, : rot // 2].astype(jnp.float32)
+    if sin.ndim == 3:     # per-sequence positions: (B, S, rot/2)
+        sin_ = sin[:, :, None, : rot // 2].astype(jnp.float32)
+        cos_ = cos[:, :, None, : rot // 2].astype(jnp.float32)
+    else:
+        sin_ = sin[None, :, None, : rot // 2].astype(jnp.float32)
+        cos_ = cos[None, :, None, : rot // 2].astype(jnp.float32)
     x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
     out = jnp.concatenate(
         [x1f * cos_ - x2f * sin_, x2f * cos_ + x1f * sin_], axis=-1)
@@ -401,3 +408,54 @@ def attention_decode(p: dict, x: jax.Array, s: AttnSpec, cache: KVCache,
     ops.observe(b, s.n_heads * s.head_dim, x.shape[-1], tuner,
                 site="attn.out_proj")
     return linear(out, p["wo"]), new_cache
+
+
+def attention_decode_paged(p: dict, x: jax.Array, s: AttnSpec, pool,
+                           page_table: jax.Array, pos: jax.Array,
+                           tuner=None):
+    """One-token decode against a paged KV pool (continuous batching).
+
+    x (B, 1, D); ``pos`` is (B,) int32 — every sequence in the batch
+    sits at its own position (ragged admission), with -1 marking an
+    inactive batch slot; ``page_table`` (B, P) int32 maps each
+    sequence's logical pages to physical pages of ``pool``
+    (:class:`repro.serve.kv_cache.PagedKV`), -1 marking holes.
+
+    The compute is element-for-element the fixed-batch
+    :func:`attention_decode`: the page gather materialises the same
+    (B, cap, Hkv, Dh) view the contiguous cache holds (holes land
+    beyond the ``kv_ids <= pos`` valid prefix where the mask erases
+    them), so per-sequence outputs are bitwise identical to the
+    fixed-batch path — the scheduler's golden-parity contract.  The
+    cache update keeps its TRSM-site recorder tag: still a sequential
+    append + triangular-prefix read, just scattered through the page
+    table.
+    """
+    from repro.serve.kv_cache import append_token, gather_pages
+
+    if s.window is not None:
+        raise NotImplementedError(
+            "paged decode does not support sliding-window (ring) caches")
+    b = x.shape[0]
+    q, k_new, v_new = _project_qkv(p, x, s, pos[:, None], tuner)
+    cap = page_table.shape[1] * pool.page_size
+    ops.observe(cap, s.head_dim, b * s.n_heads, tuner,
+                routine="trsm", site="attn.cache_update")
+    active = pos >= 0
+    pool = type(pool)(
+        append_token(pool.k, page_table, pos, k_new[:, 0], active),
+        append_token(pool.v, page_table, pos, v_new[:, 0], active))
+    k = gather_pages(pool.k, page_table)     # (B, cap, Hkv, Dh)
+    v = gather_pages(pool.v, page_table)
+    kk = _repeat_kv(k, s.n_heads)
+    vv = _repeat_kv(v, s.n_heads)
+    scores = jnp.einsum("bohd,bkhd->bhk", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * (s.head_dim ** -0.5)
+    valid = jnp.arange(cap)[None, :] <= pos[:, None]
+    scores = jnp.where(valid[:, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhk,bkhd->bhd", probs, vv.astype(jnp.float32))
+    out = out.reshape(b, 1, s.n_heads * s.head_dim).astype(x.dtype)
+    ops.observe(b, s.n_heads * s.head_dim, x.shape[-1], tuner,
+                site="attn.out_proj")
+    return linear(out, p["wo"]), pool

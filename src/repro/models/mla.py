@@ -24,8 +24,9 @@ from repro.models.layers import (
 )
 from repro.models.params import ParamDef
 
-__all__ = ["MLASpec", "mla_defs", "mla_train", "mla_decode", "MLACache",
-           "init_mla_cache", "seed_mla_cache"]
+__all__ = ["MLASpec", "mla_defs", "mla_train", "mla_decode",
+           "mla_decode_paged", "MLACache", "init_mla_cache",
+           "seed_mla_cache"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,11 +65,18 @@ def mla_defs(s: MLASpec) -> dict:
 
 
 def _rope_1head(x: jax.Array, positions: jax.Array) -> jax.Array:
-    """Rotate a (B, S, R) shared rope key / (B, S, H, R) query rope part."""
+    """Rotate a (B, S, R) shared rope key / (B, S, H, R) query rope part.
+
+    ``positions`` is (S,) — or (B, S) when every sequence in the batch
+    sits at its own position (the paged continuous-batching decode)."""
     r = x.shape[-1]
     sin, cos = rope_angles(positions, r)
     x1, x2 = x[..., : r // 2], x[..., r // 2:]
-    if x.ndim == 4:
+    if positions.ndim == 2:   # per-sequence: sin/cos already (B, S, r/2)
+        if x.ndim == 4:
+            sin = sin[:, :, None, :]
+            cos = cos[:, :, None, :]
+    elif x.ndim == 4:
         sin = sin[None, :, None, :]
         cos = cos[None, :, None, :]
     else:
@@ -203,3 +211,48 @@ def mla_decode(p: dict, x: jax.Array, s: MLASpec, cache: MLACache,
     out = jnp.einsum("bhr,rhd->bhd", o_lat, wv_b.astype(jnp.float32))
     out = out.reshape(b, 1, s.n_heads * s.v_head_dim).astype(x.dtype)
     return linear(out, p["wo"]), cache
+
+
+def mla_decode_paged(p: dict, x: jax.Array, s: MLASpec, pool,
+                     page_table: jax.Array, pos: jax.Array, tuner=None):
+    """One-token decode against a paged latent pool (continuous batching).
+
+    The paged twin of :func:`mla_decode`: ``pos`` is (B,) int32 per-
+    sequence positions (-1 = inactive slot), ``page_table`` (B, P)
+    maps logical pages to physical pages of the
+    :class:`repro.serve.kv_cache.PagedLatent` pool.  Same absorbed-
+    projection math on the page-gathered latent view, bitwise equal
+    per sequence to the contiguous path; the latent cache update keeps
+    its TRSM-site recorder tag.
+    """
+    from repro.serve.kv_cache import append_token, gather_pages
+
+    b = x.shape[0]
+    q, c_kv_new, k_rope_new = _latents(p, x, s, pos[:, None], tuner)
+    cap = page_table.shape[1] * pool.page_size
+    ops.observe(cap, s.kv_lora_rank, b * s.n_heads,
+                tuner, routine="trsm", site="mla.cache_update")
+    active = pos >= 0
+    pool = type(pool)(
+        append_token(pool.c_kv, page_table, pos, c_kv_new[:, 0], active),
+        append_token(pool.k_rope, page_table, pos, k_rope_new[:, 0],
+                     active))
+    c_kv = gather_pages(pool.c_kv, page_table)       # (B, cap, R_kv)
+    k_rope = gather_pages(pool.k_rope, page_table)   # (B, cap, R_rope)
+    q_nope = q[..., : s.qk_nope_dim]       # (B, 1, H, nope)
+    q_rope = q[..., s.qk_nope_dim:]        # (B, 1, H, rope)
+    wk_b = p["wk_b"].reshape(s.kv_lora_rank, s.n_heads, s.qk_nope_dim)
+    q_lat = jnp.einsum("bohd,rhd->bhr", q_nope.astype(jnp.float32),
+                       wk_b.astype(jnp.float32))
+    s_lat = jnp.einsum("bhr,bkr->bhk", q_lat, c_kv.astype(jnp.float32))
+    s_rope = jnp.einsum("bohd,bkd->bhk", q_rope.astype(jnp.float32),
+                        k_rope.astype(jnp.float32))
+    scores = (s_lat + s_rope) * (s.qk_head_dim ** -0.5)
+    valid = jnp.arange(cap)[None, :] <= pos[:, None]
+    scores = jnp.where(valid[:, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhk,bkr->bhr", probs, c_kv.astype(jnp.float32))
+    wv_b = p["wv_b"].reshape(s.kv_lora_rank, s.n_heads, s.v_head_dim)
+    out = jnp.einsum("bhr,rhd->bhd", o_lat, wv_b.astype(jnp.float32))
+    out = out.reshape(b, 1, s.n_heads * s.v_head_dim).astype(x.dtype)
+    return linear(out, p["wo"]), pool

@@ -288,12 +288,52 @@ def _init_layer_cache(cfg: ArchConfig, spec: LayerSpec, batch: int,
     return XL.init_slstm_state(batch, _xlstm_spec(cfg))
 
 
+def _init_layer_paged(cfg: ArchConfig, spec: LayerSpec, n_pages: int,
+                      page_size: int, ctx: Ctx, dtype) -> Any:
+    """Paged twin of :func:`_init_layer_cache`: one page pool per
+    attention layer.  Sliding-window (ring) and recurrent-state layers
+    have no paged representation (the window bounds their memory
+    already; recurrent states carry no sequence dim) — continuous
+    batching supports the attention-cache families."""
+    from repro.serve import kv_cache as KV
+
+    if spec.kind not in ("attn", "local"):
+        raise NotImplementedError(
+            f"paged decode cache for layer kind {spec.kind!r} "
+            "(recurrent states are not paged)")
+    if ctx.kv_quantized:
+        raise NotImplementedError("paged decode with int8 KV cache")
+    if cfg.attn_kind == "mla":
+        s = _mla_spec(cfg)
+        return KV.init_paged_latent(n_pages, page_size, s.kv_lora_rank,
+                                    s.qk_rope_dim, dtype)
+    a = _attn_spec(cfg, spec.kind)
+    if a.window is not None:
+        raise NotImplementedError(
+            "paged decode cache for sliding-window (ring) layers")
+    return KV.init_paged_kv(n_pages, page_size, a.n_kv_heads,
+                            a.head_dim, dtype)
+
+
 def _apply_layer_decode(p: dict, x: jax.Array, cache: Any,
                         pos: jax.Array, cfg: ArchConfig, spec: LayerSpec,
-                        ctx: Ctx) -> tuple[jax.Array, Any]:
+                        ctx: Ctx, page_table: jax.Array | None = None
+                        ) -> tuple[jax.Array, Any]:
+    """``page_table`` switches the attention mixers onto the paged read
+    path (cache leaves are PagedKV/PagedLatent pools, ``pos`` is (B,)
+    per-sequence positions) — the continuous-batching decode."""
     h = L.apply_norm(p["ln1"], x, cfg.norm_kind)
     if spec.kind in ("attn", "local"):
-        if cfg.attn_kind == "mla":
+        if page_table is not None:
+            if cfg.attn_kind == "mla":
+                mix, cache = MLA.mla_decode_paged(
+                    p["mixer"], h, _mla_spec(cfg), cache, page_table,
+                    pos, tuner=ctx.tuner)
+            else:
+                mix, cache = L.attention_decode_paged(
+                    p["mixer"], h, _attn_spec(cfg, spec.kind), cache,
+                    page_table, pos, tuner=ctx.tuner)
+        elif cfg.attn_kind == "mla":
             mix, cache = MLA.mla_decode(p["mixer"], h, _mla_spec(cfg),
                                         cache, pos, tuner=ctx.tuner)
         else:
@@ -489,6 +529,33 @@ class LM:
             cache["scan"] = []
         return cache
 
+    def init_paged_cache(self, n_pages: int, page_size: int, ctx: Ctx,
+                         dtype=jnp.float32) -> dict:
+        """Page-pool tree mirroring :meth:`init_cache` structure-for-
+        structure — PagedKV / PagedLatent pools instead of per-batch
+        contiguous caches.  All layers share one page table (they see
+        the same token positions), so the scheduler allocates once and
+        every layer's pool is indexed by the same physical page ids."""
+        cfg = self.cfg
+        cache: dict = {
+            "prefix": [_init_layer_paged(cfg, s, n_pages, page_size,
+                                         ctx, dtype)
+                       for s in self.prefix],
+            "suffix": [_init_layer_paged(cfg, s, n_pages, page_size,
+                                         ctx, dtype)
+                       for s in self.suffix],
+        }
+        if self.repeats:
+            unit_cache = [_init_layer_paged(cfg, s, n_pages, page_size,
+                                            ctx, dtype)
+                          for s in self.unit]
+            cache["scan"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a[None], (self.repeats,) + a.shape).copy(), unit_cache)
+        else:
+            cache["scan"] = []
+        return cache
+
     def prefill(self, params: dict, tokens: jax.Array, ctx: Ctx
                 ) -> tuple[jax.Array, dict]:
         """Run the full prompt; return (last-token logits, decode caches)."""
@@ -496,14 +563,22 @@ class LM:
         return self.logits_last(params, x), caches
 
     def decode_step(self, params: dict, token: jax.Array, cache: dict,
-                    pos: jax.Array, ctx: Ctx) -> tuple[jax.Array, dict]:
-        """token (B, 1) int32 -> (logits (B, V), new cache)."""
+                    pos: jax.Array, ctx: Ctx,
+                    page_table: jax.Array | None = None
+                    ) -> tuple[jax.Array, dict]:
+        """token (B, 1) int32 -> (logits (B, V), new cache).
+
+        With ``page_table`` (B, P) the cache tree holds page pools and
+        ``pos`` is (B,) per-sequence positions (-1 = inactive slot) —
+        the continuous-batching paged decode (repro.serve.scheduler).
+        """
         cfg = self.cfg
         x = self._embed(params, token)
 
         new_prefix = []
         for p, s, c in zip(params["prefix"], self.prefix, cache["prefix"]):
-            x, c2 = _apply_layer_decode(p, x, c, pos, cfg, s, ctx)
+            x, c2 = _apply_layer_decode(p, x, c, pos, cfg, s, ctx,
+                                        page_table)
             new_prefix.append(c2)
 
         new_scan = cache["scan"]
@@ -516,7 +591,7 @@ class LM:
                 for i, s in enumerate(unit):
                     h, c2 = _apply_layer_decode(
                         layer_params[i], h, layer_cache[i], pos, cfg, s,
-                        ctx)
+                        ctx, page_table)
                     new_caches.append(c2)
                 return h, new_caches
 
@@ -525,7 +600,8 @@ class LM:
 
         new_suffix = []
         for p, s, c in zip(params["suffix"], self.suffix, cache["suffix"]):
-            x, c2 = _apply_layer_decode(p, x, c, pos, cfg, s, ctx)
+            x, c2 = _apply_layer_decode(p, x, c, pos, cfg, s, ctx,
+                                        page_table)
             new_suffix.append(c2)
 
         x = L.apply_norm(params["ln_f"], x, cfg.norm_kind)

@@ -19,13 +19,15 @@ from repro.dist.sharding import (
     batch_specs,
     data_axes,
     divisible_axes,
+    paged_spec,
     partition_params,
 )
 from repro.models.config import ArchConfig, ShapeSpec
 from repro.train.step import make_ctx
 
-__all__ = ["build_prefill", "build_decode", "prefill_batch_sds",
-           "decode_inputs_sds", "cache_specs", "cache_sds"]
+__all__ = ["build_prefill", "build_decode", "build_decode_paged",
+           "prefill_batch_sds", "decode_inputs_sds", "cache_specs",
+           "cache_sds", "paged_cache_sds"]
 
 
 def prefill_batch_sds(cfg: ArchConfig, shape: ShapeSpec,
@@ -46,26 +48,52 @@ def cache_sds(model, cfg: ArchConfig, shape: ShapeSpec,
         lambda: model.init_cache(shape.global_batch, ctx, dtype))
 
 
-def cache_specs(cache_abstract: Any, mesh) -> Any:
-    """Spec tree for decode caches.
+def paged_cache_sds(model, n_pages: int, page_size: int,
+                    dtype=jnp.bfloat16) -> Any:
+    """Abstract paged-pool tree via eval_shape (no allocation)."""
+    ctx = make_ctx(None, "decode", cache_len=0)
+    return jax.eval_shape(
+        lambda: model.init_paged_cache(n_pages, page_size, ctx, dtype))
 
-    Scan-segment caches are stacked (R, B, ...) — batch is dim 1;
-    prefix/suffix (and whisper's plain list) caches have batch at dim 0.
+
+def _is_pool(x: Any) -> bool:
+    from repro.serve.kv_cache import PagedKV, PagedLatent
+    return isinstance(x, (PagedKV, PagedLatent))
+
+
+def _segment_specs(tree: Any, mesh, *, batch_dim: int,
+                   page_dim: int) -> Any:
+    """Leaf specs for one cache segment: contiguous caches batch-shard
+    via auto_spec, paged pools (batch-dim-free) page-shard via
+    paged_spec — both 2D (data x model) on the same array."""
+    def node_spec(node):
+        if _is_pool(node):
+            return jax.tree.map(
+                lambda l: paged_spec(l.shape, mesh, page_dim=page_dim),
+                node)
+        return jax.tree.map(
+            lambda l: auto_spec(l.shape, mesh, batch_dim=batch_dim),
+            node)
+    return jax.tree.map(node_spec, tree, is_leaf=_is_pool)
+
+
+def cache_specs(cache_abstract: Any, mesh) -> Any:
+    """Spec tree for decode caches (contiguous or paged).
+
+    Scan-segment caches are stacked (R, B, ...) — batch (or the page
+    dim, for paged pools) is dim 1; prefix/suffix (and whisper's plain
+    list) caches have it at dim 0.
     """
     if isinstance(cache_abstract, dict) and "scan" in cache_abstract:
         return {
-            "prefix": jax.tree.map(
-                lambda l: auto_spec(l.shape, mesh, batch_dim=0),
-                cache_abstract["prefix"]),
-            "scan": jax.tree.map(
-                lambda l: auto_spec(l.shape, mesh, batch_dim=1),
-                cache_abstract["scan"]),
-            "suffix": jax.tree.map(
-                lambda l: auto_spec(l.shape, mesh, batch_dim=0),
-                cache_abstract["suffix"]),
+            "prefix": _segment_specs(cache_abstract["prefix"], mesh,
+                                     batch_dim=0, page_dim=0),
+            "scan": _segment_specs(cache_abstract["scan"], mesh,
+                                   batch_dim=1, page_dim=1),
+            "suffix": _segment_specs(cache_abstract["suffix"], mesh,
+                                     batch_dim=0, page_dim=0),
         }
-    return jax.tree.map(lambda l: auto_spec(l.shape, mesh, batch_dim=0),
-                        cache_abstract)
+    return _segment_specs(cache_abstract, mesh, batch_dim=0, page_dim=0)
 
 
 def decode_inputs_sds(model, cfg: ArchConfig, shape: ShapeSpec,
@@ -124,3 +152,30 @@ def build_decode(model, cfg: ArchConfig, shape: ShapeSpec, mesh,
     t_spec = P(divisible_axes(shape.global_batch, data_axes(mesh), mesh),
                None)
     return decode, p_specs, (t_spec, c_specs, P())
+
+
+def build_decode_paged(model, cfg: ArchConfig, *, slots: int,
+                       n_pages: int, page_size: int, table_pages: int,
+                       mesh, tuner=None):
+    """Paged twin of :func:`build_decode` for the continuous-batching
+    scheduler's step shapes.
+
+    Returns (decode_fn, param_specs, (token, pool, pos, table) specs).
+    ``pos`` is (slots,) per-sequence positions and ``table``
+    (slots, table_pages) the page table — both batch-sharded over the
+    data axes; the pool is page-sharded 2D via cache_specs/paged_spec.
+    """
+    cache_len = table_pages * page_size
+    ctx = make_ctx(mesh, "decode", cache_len=cache_len, tuner=tuner)
+
+    def decode(params, token, pool, pos, table):
+        return model.decode_step(params, token, pool, pos, ctx, table)
+
+    if mesh is None:
+        return decode, None, None
+    p_specs = partition_params(model, cfg, mesh)
+    pool_abs = paged_cache_sds(model, n_pages, page_size)
+    pool_specs = cache_specs(pool_abs, mesh)
+    slot_entry = divisible_axes(slots, data_axes(mesh), mesh)
+    return decode, p_specs, (P(slot_entry, None), pool_specs,
+                             P(slot_entry), P(slot_entry, None))

@@ -118,3 +118,149 @@ def test_auto_spec_heuristics():
     # B=1 long-context: nothing shardable on batch
     s = auto_spec((1, 4096, 8, 128), mesh, batch_dim=0)
     assert tuple(s)[0] is None
+
+
+# ---------------------------------------------------------------------------
+# cache_specs layout coverage: scan-dict (with suffix), whisper's plain
+# list, and paged pools — across a (1,2) and a (2,4) mesh
+# ---------------------------------------------------------------------------
+
+_MESHES = [{"data": 1, "model": 2}, {"data": 2, "model": 4}]
+
+
+def _mesh_size(mesh_shape, entry):
+    if entry is None:
+        return 1
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    size = 1
+    for a in axes:
+        size *= mesh_shape[a]
+    return size
+
+
+def _assert_specs_divisible(cache_abs, specs, mesh_shape, label):
+    """Structure parity + the GSPMD invariant on every leaf."""
+    from repro.dist.sharding import is_partition_spec
+
+    leaves = jax.tree.leaves(cache_abs)
+    spec_leaves = jax.tree.leaves(specs, is_leaf=is_partition_spec)
+    assert len(leaves) == len(spec_leaves), label
+    for l, s in zip(leaves, spec_leaves):
+        assert len(tuple(s)) == len(l.shape), (label, l.shape, s)
+        for dim, entry in zip(l.shape, tuple(s)):
+            assert dim % _mesh_size(mesh_shape, entry) == 0, \
+                f"{label}: dim {dim} not divisible by {entry}"
+
+
+@pytest.mark.parametrize("mesh_shape", _MESHES)
+@pytest.mark.parametrize("arch,batch", [
+    ("stablelm-1.6b", 4),        # pure scan, empty prefix/suffix
+    ("recurrentgemma-2b", 4),    # scan-dict WITH a non-empty suffix
+])
+def test_cache_specs_scan_dict_layout(arch, batch, mesh_shape):
+    from repro.dist.sharding import data_axes, divisible_axes
+    from repro.models.config import ShapeSpec
+    from repro.serve.step import cache_sds, cache_specs
+
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    mesh = _FakeMesh(mesh_shape)
+    shape = ShapeSpec("t", seq_len=32, global_batch=batch, kind="decode")
+    cache_abs = cache_sds(model, cfg, shape)
+    specs = cache_specs(cache_abs, mesh)
+
+    assert set(specs) == {"prefix", "scan", "suffix"}
+    if arch == "recurrentgemma-2b":
+        assert specs["suffix"], "suffix branch not exercised"
+    _assert_specs_divisible(cache_abs, specs, mesh_shape, arch)
+
+    # batch placement: dim 0 on prefix/suffix leaves, dim 1 on scan
+    want = divisible_axes(batch, data_axes(mesh), mesh)
+    for seg in ("prefix", "suffix", "scan"):
+        for s in jax.tree.leaves(
+                specs[seg],
+                is_leaf=lambda x: x.__class__.__name__ == "PartitionSpec"):
+            entries = tuple(s)
+            if seg == "scan":
+                assert entries[0] is None       # repeat dim replicated
+                assert entries[1] in (want, None)
+            else:
+                assert entries[0] in (want, None)
+
+
+@pytest.mark.parametrize("mesh_shape", _MESHES)
+def test_cache_specs_whisper_plain_list(mesh_shape):
+    """The non-dict fallback branch: whisper's per-layer list of
+    {self, cross_k, cross_v} caches, batch at dim 0 everywhere."""
+    from repro.dist.sharding import data_axes, divisible_axes
+    from repro.models.config import ShapeSpec
+    from repro.serve.step import cache_sds, cache_specs
+
+    cfg = get_smoke_config("whisper-tiny")
+    model = build_model(cfg)
+    mesh = _FakeMesh(mesh_shape)
+    shape = ShapeSpec("t", seq_len=32, global_batch=4, kind="decode")
+    cache_abs = cache_sds(model, cfg, shape)
+    specs = cache_specs(cache_abs, mesh)
+
+    assert isinstance(specs, list) and len(specs) == cfg.n_layers
+    assert set(specs[0]) == {"self", "cross_k", "cross_v"}
+    _assert_specs_divisible(cache_abs, specs, mesh_shape, "whisper")
+    want = divisible_axes(4, data_axes(mesh), mesh)
+    for s in jax.tree.leaves(
+            specs, is_leaf=lambda x: x.__class__.__name__
+            == "PartitionSpec"):
+        assert tuple(s)[0] in (want, None)
+
+
+@pytest.mark.parametrize("mesh_shape", _MESHES)
+@pytest.mark.parametrize("arch", ["stablelm-1.6b", "deepseek-v2-236b"])
+def test_cache_specs_paged_pools(arch, mesh_shape):
+    """Paged pools route through paged_spec: page dim -> data axes,
+    'model' on a head/width dim, never on the page-offset dim."""
+    from repro.serve.step import cache_specs, paged_cache_sds
+
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    mesh = _FakeMesh(mesh_shape)
+    n_pages, page_size = 16, 4
+    pool_abs = paged_cache_sds(model, n_pages, page_size)
+    specs = cache_specs(pool_abs, mesh)
+
+    _assert_specs_divisible(pool_abs, specs, mesh_shape, f"paged-{arch}")
+    for l, s in zip(jax.tree.leaves(pool_abs),
+                    jax.tree.leaves(
+                        specs, is_leaf=lambda x: x.__class__.__name__
+                        == "PartitionSpec")):
+        entries = tuple(s)
+        stacked = l.shape[0] != n_pages     # scan pools: (R, P, page, ...)
+        page_dim = 1 if stacked else 0
+        assert l.shape[page_dim] == n_pages
+        assert l.shape[page_dim + 1] == page_size
+        # page dim carries the data axes on the (2,4) mesh (16 % 2 == 0)
+        if mesh_shape["data"] > 1:
+            assert entries[page_dim] is not None
+        # the page-offset dim is NEVER sharded
+        assert entries[page_dim + 1] is None
+        if stacked:
+            assert entries[0] is None       # repeat dim replicated
+
+
+def test_paged_spec_rules():
+    from repro.dist.sharding import paged_spec
+
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    # (P=256, page=16, Hkv=8, D=128): pages->data, D->model (largest
+    # divisible dim outside the page pair)
+    s = paged_spec((256, 16, 8, 128), mesh, page_dim=0)
+    assert tuple(s) == ("data", None, None, "model")
+    # scan-stacked pool: repeat dim replicated, page dim 1
+    s = paged_spec((12, 256, 16, 8, 128), mesh, page_dim=1)
+    assert tuple(s) == (None, "data", None, None, "model")
+    # page count not divisible -> data demoted to None, model intact
+    s = paged_spec((30, 16, 8, 128), mesh, page_dim=0)
+    assert tuple(s) == (None, None, None, "model")
+    # the page-offset dim never takes 'model' even when divisible and
+    # largest: (P, page=4096, small heads)
+    s = paged_spec((256, 4096, 8, 24), mesh, page_dim=0)
+    assert tuple(s)[1] is None
