@@ -1,0 +1,260 @@
+"""Per-arch registry: measured installs, sim-to-real gap, transfer.
+
+Stages the ISSUE-10 scenario end to end on real wall-clock timings:
+
+1. the first **measured mixed-routine install** — gemm/syrk/trsm timed
+   by the hardened ``MeasuredCPUBackend`` (warmup + median-of-k) on
+   this host, through a 1-chip cache-blocking ConfigSpace, into a
+   fingerprint-keyed :class:`~repro.core.registry.ArtifactRegistry`
+   cell;
+2. the same install config on ``SimulatedBackend`` → the **sim-to-real
+   per-routine Tables III/IV gap** (how far the analytic model's
+   per-routine ideal speedups sit from measured reality);
+3. a second architecture, emulated by a deterministic per-routine /
+   per-tile skew over the measured backend, cold-starts via a
+   **transfer install** from the real cell's donor rows at ≤ 10 % of
+   the donor's timing-sample budget — compared against a scratch
+   install at the *same* local cell budget and against a full-budget
+   local install:
+
+       regret = mean( t_real(chosen) / t_real(best) - 1 )
+
+Reports ``name,us_per_call,derived`` CSV.  ``--smoke`` (the CI
+``registry`` job) asserts the ISSUE-10 contract: fingerprint JSON
+round-trip, calibration ≤ 10 % of the donor budget, transfer regret no
+worse than equal-budget scratch, and transfer within 1.5× of the
+full-budget install's regret.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+import tempfile
+
+import numpy as np
+
+from repro.core import (
+    AdsalaTuner,
+    ArtifactRegistry,
+    ConfigSpace,
+    HardwareFingerprint,
+    InstallConfig,
+    MeasuredCPUBackend,
+    SimulatedBackend,
+    install,
+)
+from repro.core.halton import sample_gemm_dims
+
+ROUTINES3 = ("gemm", "syrk", "trsm")
+#: distinct (bm, bk) cache-blocking pairs on the 1-chip measured space
+TILES = (0, 2, 3, 5)
+MAX_DIM = 512
+#: smallest timed dim — cells below ~128^3 run in microseconds, where
+#: perf_counter jitter swamps real config differences
+MIN_DIM = 128
+
+
+class SkewedBackend:
+    """A second architecture, emulated deterministically: the measured
+    backend's wall-clock scaled by a per-routine factor (different
+    relative BLAS-3 throughput, the paper's Cascade Lake vs Zen 3
+    situation) plus a mild per-tile factor (different cache hierarchy
+    reordering the blocking knob).  Deterministic so the bench's
+    transfer-vs-scratch comparison is about *information*, not luck."""
+
+    ROUTINE_SKEW = {"gemm": 1.9, "syrk": 2.6, "trsm": 1.4, "attn": 2.0}
+
+    def __init__(self, inner: MeasuredCPUBackend) -> None:
+        self.inner = inner
+
+    def _factor(self, cfg, routine: str) -> float:
+        tile = 1.0 + 0.05 * np.sin(2.3 * cfg.tile_id
+                                   + hash(routine) % 7)
+        return self.ROUTINE_SKEW[routine] * float(tile)
+
+    def time_routine(self, m, k, n, cfg, *, routine="gemm"):
+        return self._factor(cfg, routine) * self.inner.time_routine(
+            m, k, n, cfg, routine=routine)
+
+
+def measured_cfg(n_samples: int, fp, seed: int = 0,
+                 **kw) -> InstallConfig:
+    base = dict(
+        n_samples=n_samples, repeats=1, max_chips=1, tile_ids=TILES,
+        space=ConfigSpace.default(1, tiles=TILES, partitions=("M",)),
+        routines=ROUTINES3, models=("lightgbm",), cv_splits=2,
+        dim_min=MIN_DIM, dim_max=MAX_DIM, mem_limit_mb=16, seed=seed,
+        fingerprint=fp)
+    base.update(kw)
+    return InstallConfig(**base)
+
+
+def _truth_matrix(truth: SkewedBackend, eval_dims: np.ndarray,
+                  names: list[str], cfgs: list) -> np.ndarray:
+    """Hardened wall-clock measurements on the target backend; measured
+    ONCE and shared across every compared artifact so regret deltas
+    reflect the artifacts' choices, not truth re-measurement noise."""
+    t = np.empty((len(eval_dims), len(cfgs)))
+    for i, (m, k, n) in enumerate(eval_dims):
+        for j, c in enumerate(cfgs):
+            t[i, j] = truth.time_routine(int(m), int(k), int(n), c,
+                                         routine=names[i])
+    return t
+
+
+def _regret(artifact: str, truth_t: np.ndarray, eval_dims: np.ndarray,
+            names: list[str], cfgs: list) -> float:
+    """Mean oracle regret of the artifact's tuner on the shared truth."""
+    tuner = AdsalaTuner.from_artifact(artifact)
+    col = [cfgs.index(c) for c in tuner.candidates]
+    pred = tuner.predicted_times_many([tuple(d) for d in eval_dims],
+                                      routines=names)
+    chosen_j = np.asarray(col)[np.argmin(pred, axis=1)]
+    chosen = truth_t[np.arange(len(eval_dims)), chosen_j]
+    return float(np.mean(chosen / np.maximum(truth_t.min(axis=1), 1e-12)
+                         - 1.0))
+
+
+def run(smoke: bool = False) -> list[str]:
+    lines: list[str] = []
+    n_samples = 64 if smoke else 96
+    n_eval = 30 if smoke else 48
+
+    # 0. fingerprint this host; smoke asserts the JSON round-trip
+    fp_real = HardwareFingerprint.collect(probe_sizes=(64, 128),
+                                          probe_repeats=3)
+    fp_back = HardwareFingerprint.from_dict(
+        json.loads(json.dumps(fp_real.to_dict())))
+    lines.append(f"registry_fingerprint_probe,"
+                 f"{np.mean(fp_real.probe_gflops) * 1e3:.0f},"
+                 f"mgflops_mean;key={fp_real.key()}")
+    if smoke:
+        assert fp_back == fp_real and fp_back.key() == fp_real.key(), (
+            "fingerprint JSON round-trip is lossy")
+
+    # 1. first measured mixed-routine install, into a registry cell
+    root = tempfile.mkdtemp(prefix="bench_registry_")
+    reg = ArtifactRegistry(root)
+    real = MeasuredCPUBackend(max_dim=MAX_DIM, seed=0, repeats=5,
+                              warmup=1)
+    cfg = measured_cfg(n_samples, fp_real)
+    rep_real = reg.install(fp_real, real, cfg)
+    sel_real = next(r for r in rep_real.reports
+                    if r.name == rep_real.selected)
+    lines.append(f"registry_measured_nrmse,"
+                 f"{sel_real.normalised_rmse * 1e6:.0f},x1e-6")
+    for routine, s in sel_real.per_routine.items():
+        lines.append(f"registry_measured_ideal_{routine},"
+                     f"{s['ideal_mean_speedup'] * 1e3:.0f},"
+                     f"speedup_x1e3;n={int(s['n_test'])}")
+
+    # 2. sim-to-real per-routine gap: identical install config, v5e
+    # analytic backend — how far Tables III/IV drift from measurement
+    rep_sim = install(SimulatedBackend(seed=0),
+                      dataclasses.replace(cfg, fingerprint=None))
+    sel_sim = next(r for r in rep_sim.reports
+                   if r.name == rep_sim.selected)
+    for routine in ROUTINES3:
+        s_real = sel_real.per_routine.get(routine)
+        s_sim = sel_sim.per_routine.get(routine)
+        if s_real is None or s_sim is None:
+            continue
+        gap = abs(s_sim["ideal_mean_speedup"]
+                  - s_real["ideal_mean_speedup"])
+        lines.append(
+            f"registry_sim_real_gap_{routine},{gap * 1e3:.0f},"
+            f"abs_ideal_mean_x1e3;sim="
+            f"{s_sim['ideal_mean_speedup']:.3f};real="
+            f"{s_real['ideal_mean_speedup']:.3f}")
+
+    # 3. second arch: transfer vs equal-budget scratch vs full install
+    fp_b = HardwareFingerprint(
+        cpu_model=fp_real.cpu_model + " (skewed)", cores=fp_real.cores,
+        cache_kb=fp_real.cache_kb, mesh_shape=(1,))
+    arch_b = SkewedBackend(MeasuredCPUBackend(max_dim=MAX_DIM, seed=1,
+                                              repeats=5, warmup=1))
+    cal_dims = 6 if smoke else 8
+    rep_tr = reg.install(fp_b, arch_b,
+                         measured_cfg(n_samples, fp_b, seed=1,
+                                      calibration_dims=cal_dims,
+                                      calibration_top_k=len(TILES)),
+                         transfer_from="nearest")
+    tconf = json.load(open(os.path.join(rep_tr.artifact_dir,
+                                        "config.json")))
+    cal_cells = tconf["transfer"]["calibration_cells"]
+    donor_cells = tconf["transfer"]["donor_cells"]
+    budget_frac = cal_cells / max(donor_cells, 1)
+    lines.append(f"registry_transfer_budget,{cal_cells},"
+                 f"cells;donor={donor_cells};"
+                 f"fraction={budget_frac:.3f}")
+
+    n_cfgs = len(tconf["candidates"])
+    scratch_art = os.path.join(root, "scratch_equal_budget")
+    install(arch_b, measured_cfg(max(2, cal_cells // n_cfgs), fp_b,
+                                 seed=1),
+            artifact_dir=scratch_art)
+    full_art = os.path.join(root, "scratch_full_budget")
+    install(arch_b, measured_cfg(n_samples, fp_b, seed=1),
+            artifact_dir=full_art)
+
+    # ground truth: hardened measurements on arch B (median-of-7)
+    truth = SkewedBackend(MeasuredCPUBackend(max_dim=MAX_DIM, seed=2,
+                                             repeats=7, warmup=1))
+    eval_dims = sample_gemm_dims(
+        n_eval, mem_limit_bytes=16 * 2**20, dim_min=MIN_DIM,
+        dim_max=MAX_DIM, dtype_bytes=2, seed=321)
+    names = [ROUTINES3[i % 3] for i in range(len(eval_dims))]
+    cfgs = AdsalaTuner.from_artifact(full_art).candidates
+    truth_t = _truth_matrix(truth, eval_dims, names, cfgs)
+    r_transfer = _regret(rep_tr.artifact_dir, truth_t, eval_dims,
+                         names, cfgs)
+    r_scratch = _regret(scratch_art, truth_t, eval_dims, names, cfgs)
+    r_full = _regret(full_art, truth_t, eval_dims, names, cfgs)
+    lines.append(f"registry_regret_transfer,{r_transfer * 1e6:.0f},"
+                 f"regret_x1e6;cal_cells={cal_cells}")
+    lines.append(f"registry_regret_scratch_equal,{r_scratch * 1e6:.0f},"
+                 f"regret_x1e6;same_budget")
+    lines.append(f"registry_regret_scratch_full,{r_full * 1e6:.0f},"
+                 f"regret_x1e6;{n_samples}dims")
+    lines.append(f"registry_transfer_vs_full,"
+                 f"{r_transfer / max(r_full, 1e-9):.2f},x")
+
+    # serve-side resolution: arch B's cell now resolves exactly
+    from repro.core import resolve_serving_artifact
+    resolved = resolve_serving_artifact(root, fingerprint=fp_b)
+    lines.append(f"registry_resolve_exact,{int(resolved.exact)},"
+                 f"cell={resolved.cell.key()}")
+
+    if smoke:
+        assert budget_frac <= 0.10, (
+            f"calibration spent {budget_frac:.1%} of the donor budget "
+            "(> 10%)")
+        # measured-timing tolerance: 1% absolute regret, and a 3%
+        # floor for near-tie grids where both land within noise
+        assert r_transfer <= max(r_scratch + 0.01, 0.03), (
+            f"transfer regret {r_transfer:.4f} worse than equal-budget "
+            f"scratch {r_scratch:.4f}")
+        # the floor covers the regret *estimator's* own noise: one
+        # flipped near-tie eval dim moves the mean by ~1%, so a
+        # near-perfect full install (r ~ 0) would otherwise demand
+        # transfer match it within estimator jitter
+        assert r_transfer <= 1.5 * max(r_full, 0.03), (
+            f"transfer regret {r_transfer:.4f} not within 1.5x of the "
+            f"full install's {r_full:.4f}")
+        assert resolved.exact and \
+            resolved.path == rep_tr.artifact_dir, (
+                "registry did not resolve arch B's own cell")
+    return lines
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv
+    for line in run(smoke=smoke):
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

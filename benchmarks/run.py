@@ -1,12 +1,12 @@
 """Benchmark harness: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV and writes a machine-readable
-``BENCH_9.json`` (per-suite rows + medians, install wall-clock and the
+``BENCH_10.json`` (per-suite rows + medians, install wall-clock and the
 selected model's warm-tuner speedups) so the perf trajectory is tracked
 across PRs instead of scraped from logs.  Modules share a cached ADSALA
 install run per platform (benchmarks/common.py); ADSALA_BENCH_FULL=1
 raises the install budget to paper scale, ADSALA_BENCH_JSON overrides
-the JSON output path (default ``results/BENCH_9.json``).
+the JSON output path (default ``results/BENCH_10.json``).
 """
 
 from __future__ import annotations
@@ -85,6 +85,7 @@ def main() -> None:
         bench_install_vectorised,
         bench_model_selection,
         bench_predesigned,
+        bench_registry,
         bench_reinstall,
         bench_roofline,
         bench_routine_grid,
@@ -100,6 +101,7 @@ def main() -> None:
         ("search_harness", bench_search.run),
         ("workload_install", bench_workload_install.run),
         ("reinstall_loop", bench_reinstall.run),
+        ("registry_transfer", bench_registry.run),
         ("serving_scheduler", bench_scheduler.run),
         ("dispatch_overhead", bench_dispatch_overhead.run),
         ("flash_attention", bench_flash.run),
@@ -167,7 +169,7 @@ def main() -> None:
         failures += 1
         traceback.print_exc()
     out_path = os.environ.get("ADSALA_BENCH_JSON",
-                              os.path.join("results", "BENCH_9.json"))
+                              os.path.join("results", "BENCH_10.json"))
     os.makedirs(os.path.dirname(os.path.abspath(out_path)), exist_ok=True)
     with open(out_path, "w") as f:
         json.dump(bench_json, f, indent=1)

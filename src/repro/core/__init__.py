@@ -42,6 +42,13 @@ from repro.core.installer import (
     gather_data,
     install,
     load_artifact,
+    transfer_gather,
+)
+from repro.core.registry import (
+    ArtifactRegistry,
+    HardwareFingerprint,
+    ResolvedArtifact,
+    resolve_serving_artifact,
 )
 from repro.core.search import (
     Axis,
@@ -55,6 +62,8 @@ from repro.core.search import (
 from repro.core.timing import (
     MeasuredCPUBackend,
     SimulatedBackend,
+    backend_from_dict,
+    describe_backend,
     time_gemm_grid,
     time_routine_cells,
     time_routine_grid,
@@ -74,7 +83,11 @@ __all__ = [
     "scrambled_halton", "sample_gemm_dims", "sample_gemm_dims_mixture",
     "gemm_bytes", "WorkloadProfile",
     "InstallConfig", "GatheredData", "InstallReport", "gather_data",
-    "install", "load_artifact", "DEFAULT_WORKER_CONFIG",
+    "install", "load_artifact", "transfer_gather",
+    "DEFAULT_WORKER_CONFIG",
     "SimulatedBackend", "MeasuredCPUBackend",
+    "describe_backend", "backend_from_dict",
+    "HardwareFingerprint", "ArtifactRegistry", "ResolvedArtifact",
+    "resolve_serving_artifact",
     "AdsalaTuner",
 ]

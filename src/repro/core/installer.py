@@ -34,14 +34,15 @@ from repro.core.preprocessing import PreprocessPipeline
 from repro.core.timing import (
     SimulatedBackend,
     TimingBackend,
+    describe_backend,
     time_routine_cells,
     time_routine_grid,
 )
 
 __all__ = [
     "GatheredData", "InstallConfig", "ModelReport", "InstallReport",
-    "gather_data", "install", "load_artifact", "default_config",
-    "DEFAULT_WORKER_CONFIG",
+    "gather_data", "transfer_gather", "install", "load_artifact",
+    "default_config", "DEFAULT_WORKER_CONFIG",
     "artifact_tmp_dir", "artifact_prev_dir", "is_artifact",
     "commit_artifact", "rollback_artifact", "resolve_artifact",
 ]
@@ -114,6 +115,20 @@ class InstallConfig:
     #: exploration configs instead of beam survivors (guards the model
     #: against the prior's blind spots)
     explore_fraction: float = 0.25
+    #: :class:`repro.core.registry.HardwareFingerprint` (or its dict
+    #: form) of the machine this install targets; persisted under
+    #: ``"fingerprint"`` in config.json so ``from_artifact`` can warn
+    #: when an artifact is served on different hardware.  None keeps
+    #: the legacy anonymous-artifact layout.
+    fingerprint: Any | None = None
+    #: transfer installs (``install(..., transfer_from=...)``): how
+    #: many donor dims get re-timed on the local backend to fit the
+    #: cross-arch correction.
+    calibration_dims: int = 32
+    #: per calibration dim, how many of the donor's fastest timed
+    #: columns to re-time locally (the donor's beam survivors); the
+    #: donor's default-config column is always added on top.
+    calibration_top_k: int = 4
 
     @property
     def mem_limit_bytes(self) -> int:
@@ -440,6 +455,140 @@ def gather_data(backend: TimingBackend, cfg: InstallConfig) -> GatheredData:
                         space=space.to_dict())
 
 
+def transfer_gather(backend: TimingBackend, cfg: InstallConfig,
+                    donor_dir: str
+                    ) -> tuple[GatheredData, dict]:
+    """Warm-start a local grid from a donor artifact's gathered rows.
+
+    The cross-arch transfer of the model-driven adaptive-libraries line
+    (arXiv 1806.07060): instead of re-timing the donor's full
+    (dim x config) grid on this machine, re-time only
+    ``cfg.calibration_dims`` donor dims — per dim, the donor's
+    ``calibration_top_k`` fastest timed columns (its beam survivors)
+    plus the default config — via :func:`time_routine_cells`, fit a
+    multiplicative correction in log space
+    (``median(log t_local - log t_donor)``) per routine, refined per
+    (routine, config) column where calibration measured that column,
+    and apply it to every donor cell.  Locally measured cells keep
+    their measured value; the
+    rest carry the corrected donor estimate.  The returned grid feeds
+    the standard :func:`install` machinery, so a new machine cold-starts
+    at a few-dozen-sample fraction of the donor's timing budget.
+
+    Returns ``(corrected_grid, transfer_info)`` where ``transfer_info``
+    is the JSON-able provenance block persisted under ``"transfer"``.
+    """
+    grid_path = os.path.join(donor_dir, "grid.npz")
+    if not os.path.isfile(grid_path):
+        raise FileNotFoundError(
+            f"donor artifact {donor_dir} has no grid.npz — it predates "
+            "transfer-capable installs; re-install the donor or run a "
+            "from-scratch install here")
+    donor = GatheredData.load(grid_path)
+    donor_config = None
+    cfg_path = os.path.join(donor_dir, "config.json")
+    if os.path.isfile(cfg_path):
+        with open(cfg_path) as f:
+            donor_config = json.load(f)
+
+    D, C = donor.times.shape
+    rids = donor.routine_ids()
+    timed = donor.timed_mask() & np.isfinite(donor.times)
+    rng = np.random.default_rng(cfg.seed)
+    n_cal = max(1, min(cfg.calibration_dims, D))
+
+    # calibration dims: stratified across the donor's routines so every
+    # routine's correction is fit from its own measurements
+    unique_rids = sorted(set(int(r) for r in rids))
+    quota = {r: n_cal // len(unique_rids) for r in unique_rids}
+    for i, r in enumerate(unique_rids):
+        if i < n_cal % len(unique_rids):
+            quota[r] += 1
+    chosen: list[int] = []
+    for r in unique_rids:
+        pool = np.flatnonzero(rids == r)
+        take = min(quota[r], len(pool))
+        if take:
+            chosen.extend(rng.choice(pool, size=take,
+                                     replace=False).tolist())
+    if len(chosen) < n_cal:
+        rest = np.setdiff1d(np.arange(D), np.asarray(chosen, dtype=int))
+        extra = min(n_cal - len(chosen), len(rest))
+        if extra:
+            chosen.extend(rng.choice(rest, size=extra,
+                                     replace=False).tolist())
+    cal_idx = np.asarray(sorted(chosen), dtype=int)
+
+    try:
+        j_default = donor.cfgs.index(cfg.default_config)
+    except ValueError:
+        j_default = None
+    cal_mask = np.zeros((D, C), dtype=bool)
+    for i in cal_idx:
+        js = np.flatnonzero(timed[i])
+        if not len(js):
+            continue
+        order = js[np.argsort(donor.times[i, js])]
+        take = list(order[:max(1, cfg.calibration_top_k)])
+        if (j_default is not None and timed[i, j_default]
+                and j_default not in take):
+            take.append(j_default)
+        cal_mask[i, take] = True
+
+    local = time_routine_cells(backend, donor.dims, donor.cfgs, cal_mask,
+                               cfg.repeats, routines=rids)
+    meas = cal_mask & np.isfinite(local)
+    log_delta = np.zeros_like(local)      # only meas entries are read
+    log_delta[meas] = (np.log(np.maximum(local[meas], 1e-12))
+                       - np.log(np.maximum(donor.times[meas], 1e-12)))
+    all_deltas = log_delta[meas]
+    global_delta = float(np.median(all_deltas)) if len(all_deltas) else 0.0
+    corrected = donor.times.copy()
+    per_routine_delta: dict[str, float] = {}
+    for r in unique_rids:
+        sel = meas & (rids == r)[:, None]
+        d_r = float(np.median(log_delta[sel])) if sel.any() \
+            else global_delta
+        per_routine_delta[ROUTINES[r]] = d_r
+        rowsel = rids == r
+        corrected[rowsel] = donor.times[rowsel] * np.exp(d_r)
+        # column refinement: calibration times the donor's fastest
+        # columns on *every* calibration dim, so most (routine, config)
+        # pairs carry their own local measurements — a per-column
+        # median captures config-level differences (a cache hierarchy
+        # reordering the blocking knob) that a routine-wide scalar
+        # cannot
+        for j in range(C):
+            cj = sel[:, j]
+            n_rj = int(cj.sum())
+            if n_rj:
+                # shrink toward the routine median: a column delta fit
+                # from one or two noisy samples should not scale the
+                # whole column on its own
+                w = n_rj / (n_rj + 1.0)
+                d_rj = (w * float(np.median(log_delta[cj, j]))
+                        + (1.0 - w) * d_r)
+                corrected[rowsel, j] = donor.times[rowsel, j] \
+                    * np.exp(d_rj)
+    corrected[meas] = local[meas]       # measured truth beats estimates
+
+    data = GatheredData(dims=donor.dims, cfgs=donor.cfgs,
+                        times=corrected, routines=donor.routines,
+                        workload=donor.workload, mask=donor.mask,
+                        space=donor.space)
+    info = {
+        "donor": os.path.abspath(donor_dir),
+        "donor_fingerprint": (donor_config or {}).get("fingerprint"),
+        "donor_backend": (donor_config or {}).get("backend"),
+        "calibration_dims": int(len(cal_idx)),
+        "calibration_cells": int(meas.sum()),
+        "donor_cells": int(timed.sum()),
+        "log_delta_per_routine": per_routine_delta,
+        "global_log_delta": global_delta,
+    }
+    return data, info
+
+
 @dataclasses.dataclass
 class ModelReport:
     """One row of the paper's Tables III/IV."""
@@ -611,12 +760,27 @@ def install(backend: TimingBackend | None = None,
             cfg: InstallConfig | None = None, *,
             artifact_dir: str | None = None,
             data: GatheredData | None = None,
+            transfer_from: str | None = None,
             verbose: bool = False) -> InstallReport:
-    """Run the full installation workflow; optionally persist the artifact."""
+    """Run the full installation workflow; optionally persist the artifact.
+
+    ``transfer_from`` names a donor artifact directory: the grid is
+    warm-started from the donor's persisted rows via
+    :func:`transfer_gather` (a few dozen locally-timed calibration
+    cells instead of a full gather), and the correction provenance is
+    persisted under ``"transfer"`` in config.json.
+    """
     cfg = cfg or InstallConfig()
     backend = backend or SimulatedBackend(seed=cfg.seed)
+    transfer_info = None
     if data is None:
-        data = gather_data(backend, cfg)
+        if transfer_from is not None:
+            data, transfer_info = transfer_gather(backend, cfg,
+                                                  transfer_from)
+        else:
+            data = gather_data(backend, cfg)
+    elif transfer_from is not None:
+        raise ValueError("pass either data= or transfer_from=, not both")
 
     # --- split on GEMM *inputs* (not rows) so test dims are unseen --------
     D = len(data.dims)
@@ -626,6 +790,15 @@ def install(backend: TimingBackend | None = None,
         dim_idx[:, None], log_best, test_fraction=cfg.test_fraction,
         seed=cfg.seed)
     test_dims = set(test_dim_idx[:, 0].astype(int).tolist())
+    if not test_dims:
+        # tiny installs (a handful of calibration-scale dims) can leave
+        # the stratified split's test side empty; hold out the slowest
+        # dim so the report always has a held-out row
+        test_dims = {int(np.argmax(log_best))}
+    elif len(test_dims) >= D:
+        # ... and per-routine strata of one dim each can put *every*
+        # dim on the test side; keep at least one dim for training
+        test_dims.discard(int(np.argmin(log_best)))
     train_mask = np.asarray([i not in test_dims for i in range(D)])
 
     rids = data.routine_ids()
@@ -731,6 +904,19 @@ def install(backend: TimingBackend | None = None,
                 "workload": data.workload if data.workload is not None
                 else (cfg.workload.to_dict()
                       if cfg.workload is not None else None),
+                # provenance: which hardware this install targeted and
+                # which backend timed the grid.  Absent/None on legacy
+                # artifacts — from_artifact treats that as "unknown"
+                # and skips the mismatch check.
+                "fingerprint": (
+                    cfg.fingerprint.to_dict()
+                    if hasattr(cfg.fingerprint, "to_dict")
+                    else cfg.fingerprint),
+                "backend": describe_backend(backend),
+                # non-None iff this was a transfer install: donor path,
+                # fitted per-routine log-space correction, calibration
+                # budget actually spent
+                "transfer": transfer_info,
                 "selection": [r.to_dict() for r in reports],
                 "selected": selected,
                 # v3: explicit config dicts, validated against the
@@ -749,6 +935,11 @@ def install(backend: TimingBackend | None = None,
             }, f, indent=1)
         with open(os.path.join(artifact_dir, "model.json"), "w") as f:
             json.dump(fitted[selected].to_dict(), f)
+        # the gathered grid itself: transfer installs on other machines
+        # warm-start from these rows (transfer_gather reads grid.npz).
+        # is_artifact() deliberately ignores it — legacy artifacts stay
+        # loadable, they just can't act as transfer donors.
+        data.save(os.path.join(artifact_dir, "grid.npz"))
     return report
 
 

@@ -122,10 +122,14 @@ def grid_search(
         params = dict(zip(keys, combo))
         scores = []
         for train, val in kf.split(y):
+            if len(train) == 0 or len(val) == 0:
+                # singleton strata all land in fold 0, so tiny
+                # (calibration-scale) datasets can produce empty folds
+                continue
             model = make_model(**params)
             model.fit(X[train], y[train])
             scores.append(rmse(y[val], model.predict(X[val])))
-        score = float(np.mean(scores))
+        score = float(np.mean(scores)) if scores else np.inf
         if score < best_score:
             best_score, best_params = score, params
     return best_params, best_score

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Protocol
+from typing import Any, Protocol
 
 import numpy as np
 
@@ -32,7 +32,8 @@ from repro.core.costmodel import (
 )
 
 __all__ = ["TimingBackend", "SimulatedBackend", "MeasuredCPUBackend",
-           "time_gemm_grid", "time_routine_grid", "time_routine_cells"]
+           "time_gemm_grid", "time_routine_grid", "time_routine_cells",
+           "describe_backend", "backend_from_dict"]
 
 
 class TimingBackend(Protocol):
@@ -209,16 +210,34 @@ class SimulatedBackend:
 class MeasuredCPUBackend:
     """Wall-clock timing of blocked numpy BLAS-3 routines on the host CPU.
 
-    cfg.tile[1] (bk) selects the K-panel size of an explicitly blocked
-    routine — the single-core analogue of a cache-blocking parameter.
-    cfg.n_chips is ignored (one physical core in the container); the
-    candidate set used with this backend holds n_chips=1.
+    cfg.tile (bm, bk) selects the M/K panel sizes of an explicitly
+    blocked routine — the single-core analogue of cache-blocking
+    parameters.  cfg.n_chips is ignored (one physical core in the
+    container); the candidate set used with this backend holds
+    n_chips=1.
+
+    ``repeats``/``warmup`` harden every sample against timing noise on
+    shared boxes: each :meth:`time_routine` call runs ``warmup``
+    untimed executions (operand/page cache warm, BLAS thread spin-up)
+    and returns the **median** of ``repeats`` timed ones.  The
+    defaults keep the historical single-execution behaviour; measured
+    installs and transfer-calibration samples should raise ``repeats``
+    (the grid-level repeat loop in :func:`time_routine_grid` then
+    medians *those* medians).
     """
 
     max_dim: int = 2048
     seed: int = 0
+    #: timed executions per sample (median taken); 1 = one raw timing
+    repeats: int = 1
+    #: untimed executions before the timed ones
+    warmup: int = 1
 
     def __post_init__(self) -> None:
+        if self.repeats < 1:
+            raise ValueError(f"repeats={self.repeats} < 1")
+        if self.warmup < 0:
+            raise ValueError(f"warmup={self.warmup} < 0")
         self._rng = np.random.default_rng(self.seed)
         self._buffers: dict[tuple[int, int], np.ndarray] = {}
 
@@ -241,14 +260,28 @@ class MeasuredCPUBackend:
 
     def time_routine(self, m: int, k: int, n: int, cfg: GemmConfig, *,
                      routine: str = "gemm") -> float:
+        """Median of ``repeats`` timed executions after ``warmup``
+        untimed ones (noise hardening for shared CI boxes)."""
+        for _ in range(self.warmup):
+            self._run_once(m, k, n, cfg, routine)
+        if self.repeats == 1:
+            return self._run_once(m, k, n, cfg, routine)
+        return float(np.median([self._run_once(m, k, n, cfg, routine)
+                                for _ in range(self.repeats)]))
+
+    def _run_once(self, m: int, k: int, n: int, cfg: GemmConfig,
+                  routine: str) -> float:
         m, k, n = (min(d, self.max_dim) for d in (m, k, n))
         bk = max(8, min(cfg.tile[1], k))
         if routine == "gemm":
+            bm = max(8, min(cfg.tile[0], m))
             a, b = self._operand(m, k), self._operand(k, n)
             t0 = time.perf_counter()
             c = np.zeros((m, n), dtype=np.float32)
-            for k0 in range(0, k, bk):
-                c += a[:, k0:k0 + bk] @ b[k0:k0 + bk, :]
+            for m0 in range(0, m, bm):
+                am = a[m0:m0 + bm]
+                for k0 in range(0, k, bk):
+                    c[m0:m0 + bm] += am[:, k0:k0 + bk] @ b[k0:k0 + bk, :]
             dt = time.perf_counter() - t0
         elif routine == "syrk":
             a = self._operand(m, k)
@@ -313,3 +346,51 @@ class MeasuredCPUBackend:
 
     def time_gemm(self, m: int, k: int, n: int, cfg: GemmConfig) -> float:
         return self.time_routine(m, k, n, cfg, routine="gemm")
+
+
+# ---------------------------------------------------------------------------
+# backend provenance (per-arch artifact registry)
+# ---------------------------------------------------------------------------
+#
+# Artifacts record WHICH backend timed their grid ("backend" block in
+# config.json, written by installer.install) so the serving re-install
+# loop can rebuild the same kind of backend — a measured install must
+# re-install measured, not silently fall back to the simulator.
+
+def describe_backend(backend: Any) -> dict:
+    """JSON-able description of a timing backend (round-trips through
+    :func:`backend_from_dict` for the built-in kinds).  Backends outside
+    this module can implement ``describe() -> dict``; anything else
+    degrades to a kind-only record that cannot be reconstructed."""
+    if isinstance(backend, SimulatedBackend):
+        return {"kind": "simulated", "seed": backend.seed,
+                "dtype_bytes": backend.dtype_bytes,
+                "spec": dataclasses.asdict(backend.spec)}
+    if isinstance(backend, MeasuredCPUBackend):
+        return {"kind": "measured-cpu", "max_dim": backend.max_dim,
+                "seed": backend.seed, "repeats": backend.repeats,
+                "warmup": backend.warmup}
+    describe = getattr(backend, "describe", None)
+    if callable(describe):
+        return dict(describe())
+    return {"kind": type(backend).__name__}
+
+
+def backend_from_dict(d: dict) -> "TimingBackend":
+    """Reconstruct a timing backend from its persisted description.
+    Raises ``ValueError`` for kinds this process cannot rebuild (the
+    caller decides whether to fall back or refuse)."""
+    kind = d.get("kind")
+    if kind == "simulated":
+        spec = TPUSpec(**d["spec"]) if d.get("spec") else TPUSpec()
+        return SimulatedBackend(spec=spec,
+                                dtype_bytes=int(d.get("dtype_bytes", 2)),
+                                seed=int(d.get("seed", 0)))
+    if kind == "measured-cpu":
+        return MeasuredCPUBackend(max_dim=int(d.get("max_dim", 2048)),
+                                  seed=int(d.get("seed", 0)),
+                                  repeats=int(d.get("repeats", 1)),
+                                  warmup=int(d.get("warmup", 1)))
+    raise ValueError(
+        f"cannot reconstruct a timing backend of kind {kind!r} — "
+        "pass one explicitly (backend=...)")

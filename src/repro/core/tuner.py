@@ -115,6 +115,19 @@ class AdsalaTuner:
         #: uniform install / no provenance).  Serving code compares the
         #: live recorded mix against it (see :meth:`workload_drift`).
         self.workload = workload
+        #: HardwareFingerprint the artifact was installed for (None =
+        #: legacy artifact / no provenance); set by from_artifact.
+        self.fingerprint = None
+        #: ``describe_backend`` dict of the backend that timed the
+        #: install grid (None = legacy artifact).  The serving
+        #: re-install loop uses it to rebuild the same kind of backend.
+        self.backend_info = None
+        #: ``"transfer"`` provenance block for transfer-installed
+        #: artifacts (donor path + fitted correction); None otherwise.
+        self.transfer_info = None
+        # fingerprint-mismatch warning latch: warn once per tuner, not
+        # once per dispatch (see check_fingerprint)
+        self._fp_warned = False
         # Three feature generations (see repro.core.features): gen-1
         # GEMM-only artifacts predate the routine columns, gen-2 BLAS-3
         # artifacts predate the flash columns.  Keep feeding each model
@@ -159,7 +172,14 @@ class AdsalaTuner:
         self._flash = _flash_columns(candidates)
 
     @classmethod
-    def from_artifact(cls, artifact_dir: str, **kw: Any) -> "AdsalaTuner":
+    def from_artifact(cls, artifact_dir: str, *,
+                      local_fingerprint: Any | None = None,
+                      **kw: Any) -> "AdsalaTuner":
+        """Load a persisted install.  ``local_fingerprint`` (a
+        :class:`~repro.core.registry.HardwareFingerprint`) triggers a
+        provenance check: an artifact installed for different hardware
+        warns once.  Artifacts predating the ``"fingerprint"`` block
+        load exactly as before (no provenance, no check)."""
         model, pipe, cands, config = load_artifact(artifact_dir)
         kw.setdefault("feature_names", config.get("feature_names"))
         installed = config.get("install", {}).get("routines")
@@ -228,7 +248,37 @@ class AdsalaTuner:
                     f"{tuner.routines} / candidate space (hand-edited "
                     "or mixed-version artifact?)", stacklevel=2)
             tuner.warm_start(entries)
+        # provenance (absent on legacy artifacts — loading must still
+        # work, the tuner just has nothing to check against)
+        if config.get("fingerprint") is not None:
+            from repro.core.registry import HardwareFingerprint  # no cycle
+            tuner.fingerprint = HardwareFingerprint.from_dict(
+                config["fingerprint"])
+        tuner.backend_info = config.get("backend")
+        tuner.transfer_info = config.get("transfer")
+        if local_fingerprint is not None:
+            tuner.check_fingerprint(local_fingerprint)
         return tuner
+
+    def check_fingerprint(self, local: Any) -> bool:
+        """True when the artifact's installed fingerprint matches this
+        machine's (same registry key), or when the artifact carries no
+        provenance.  A mismatch warns ONCE per tuner — dispatch-path
+        callers may check freely without flooding the log."""
+        if self.fingerprint is None or local is None:
+            return True
+        if self.fingerprint.key() == local.key():
+            return True
+        if not self._fp_warned:
+            self._fp_warned = True
+            warnings.warn(
+                f"artifact was installed for "
+                f"{self.fingerprint.key()} but is being served on "
+                f"{local.key()} (distance "
+                f"{self.fingerprint.distance(local):.3f}) — timings "
+                "transfer only approximately; run a transfer install "
+                "for this machine", stacklevel=2)
+        return False
 
     def workload_drift(self, observed_mix: dict[str, float]
                        ) -> float | None:

@@ -98,6 +98,27 @@ def main() -> None:
                     help="run a mix-weighted install driven by the "
                          "profile (simulated v5e backend)")
     ap.add_argument("--artifact", default="results/adsala_artifact_workload")
+    ap.add_argument("--registry", default=None,
+                    help="install into this per-arch registry root "
+                         "instead of --artifact: the cell is this "
+                         "machine's hardware fingerprint and the "
+                         "commit is atomic (tmp/COMMIT/.prev)")
+    ap.add_argument("--backend", default="simulated",
+                    choices=["simulated", "measured"],
+                    help="timing backend: 'measured' times real "
+                         "blocked BLAS-3 on this host "
+                         "(MeasuredCPUBackend) instead of the v5e "
+                         "analytic model")
+    ap.add_argument("--transfer", default="none",
+                    help="'none' (full local gather), 'nearest' (pick "
+                         "the closest populated registry cell as "
+                         "donor; needs --registry), or a donor "
+                         "artifact path: warm-start from the donor's "
+                         "gathered rows and only time "
+                         "--calibration-dims locally")
+    ap.add_argument("--calibration-dims", type=int, default=32,
+                    help="donor dims re-timed locally by a transfer "
+                         "install")
     ap.add_argument("--samples", type=int, default=400,
                     help="install budget (paper scale: 1763)")
     ap.add_argument("--bias", type=float, default=0.75,
@@ -136,15 +157,37 @@ def main() -> None:
         n_samples=args.samples, routines=tuple(ROUTINES),
         workload=profile, workload_bias=args.bias, seed=args.seed,
         space=space, timing_budget=args.timing_budget,
-        beam_width=args.beam_width)
+        beam_width=args.beam_width,
+        calibration_dims=args.calibration_dims)
+    if args.backend == "measured":
+        from repro.core.timing import MeasuredCPUBackend
+        backend = MeasuredCPUBackend(seed=args.seed, repeats=3)
+    else:
+        backend = SimulatedBackend(seed=args.seed)
     grid = (f"{args.space} space, "
             + (f"budget {args.timing_budget} cells, beam "
                f"{args.beam_width}" if args.timing_budget
                else "dense grid"))
-    print(f"[profile] mix-weighted install: {args.samples} samples, "
-          f"bias {args.bias}, {grid} -> {args.artifact}")
-    report = install(SimulatedBackend(seed=args.seed), cfg,
-                     artifact_dir=args.artifact, verbose=True)
+    transfer = None if args.transfer == "none" else args.transfer
+    if args.registry:
+        from repro.core.registry import (ArtifactRegistry,
+                                         HardwareFingerprint)
+        reg = ArtifactRegistry(args.registry)
+        fp = HardwareFingerprint.collect()
+        print(f"[profile] mix-weighted install: {args.samples} samples, "
+              f"bias {args.bias}, {grid}, {args.backend} backend -> "
+              f"registry cell {fp.key()}")
+        report = reg.install(fp, backend, cfg, transfer_from=transfer,
+                             verbose=True)
+    else:
+        if transfer == "nearest":
+            sys.exit("[profile] --transfer nearest needs --registry "
+                     "(there is no registry to pick a neighbour from)")
+        print(f"[profile] mix-weighted install: {args.samples} samples, "
+              f"bias {args.bias}, {grid}, {args.backend} backend -> "
+              f"{args.artifact}")
+        report = install(backend, cfg, artifact_dir=args.artifact,
+                         transfer_from=transfer, verbose=True)
     print(report.table())
 
 

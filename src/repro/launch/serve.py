@@ -50,6 +50,13 @@ def main() -> None:
                          "2x worst case for --slots sequences)")
     ap.add_argument("--artifact", default=None,
                     help="ADSALA artifact dir (tuner enabled when set)")
+    ap.add_argument("--registry", default=None,
+                    help="per-architecture artifact registry root: "
+                         "fingerprint this host and serve from its own "
+                         "cell, falling back to the nearest populated "
+                         "neighbour (mutually exclusive with "
+                         "--artifact); with --reinstall the loop "
+                         "targets this machine's cell")
     ap.add_argument("--search-width", type=int, default=None,
                     help="beam width for dispatch-time config search "
                          "over the artifact's persisted space (default: "
@@ -93,6 +100,38 @@ def main() -> None:
     # volume-weighted so the install budget follows serving volume
     recs = {"prefill": DispatchRecorder(), "decode": DispatchRecorder()}
 
+    fingerprint = None
+    if args.registry:
+        if args.artifact:
+            raise SystemExit("--registry and --artifact are mutually "
+                             "exclusive: the registry resolves the "
+                             "artifact by this machine's fingerprint")
+        from repro.core.registry import (ArtifactRegistry,
+                                         resolve_serving_artifact)
+        resolved = resolve_serving_artifact(args.registry)
+        fingerprint = resolved.local
+        if resolved.path is None:
+            raise SystemExit(
+                f"registry {args.registry} has no servable artifact in "
+                f"any cell — run an install first "
+                "(repro.launch.profile --registry ...)")
+        if not resolved.exact and args.reinstall:
+            # the re-install loop must own a LOCAL cell (never
+            # overwrite the neighbour's artifact with this machine's
+            # corrected timings): seed ours by adopting the neighbour
+            reg = ArtifactRegistry(args.registry)
+            args.artifact = reg.adopt(fingerprint, resolved.path)
+            print(f"[serve] registry: cold cell {fingerprint.key()} "
+                  f"seeded from nearest neighbour "
+                  f"{resolved.cell.key()} (adopt; re-installs stay "
+                  "local)")
+        else:
+            args.artifact = resolved.path
+            cell = ("own cell" if resolved.exact
+                    else f"nearest cell {resolved.cell.key()}")
+            print(f"[serve] registry: serving {cell} for "
+                  f"{fingerprint.key()}")
+
     tuner = None
     manager = None
     if args.artifact and os.path.isdir(args.artifact):
@@ -100,11 +139,15 @@ def main() -> None:
                 if args.search_width else "fixed-candidate argmin")
         if args.reinstall:
             from repro.core.installer import InstallConfig
-            from repro.core.timing import SimulatedBackend
             from repro.serve import ReinstallConfig, ReinstallManager
+            # backend=None on purpose: the manager rebuilds the same
+            # kind of backend that installed the artifact (its
+            # "backend" provenance block) — a measured artifact
+            # re-installs measured, legacy ones fall back to the
+            # simulator
             manager = ReinstallManager(
                 args.artifact, recs,
-                backend=SimulatedBackend(seed=0),
+                fingerprint=fingerprint,
                 cfg=ReinstallConfig(
                     threshold=args.reinstall_threshold,
                     cooldown_s=args.reinstall_cooldown,
@@ -121,12 +164,14 @@ def main() -> None:
         else:
             from repro.core import AdsalaTuner
             tuner = AdsalaTuner.from_artifact(
-                args.artifact, search_width=args.search_width)
+                args.artifact, search_width=args.search_width,
+                local_fingerprint=fingerprint)
             print(f"[serve] ADSALA tuner loaded from {args.artifact} "
                   f"({mode})")
     elif args.reinstall:
-        raise SystemExit("--reinstall requires --artifact pointing at "
-                         "an installed ADSALA artifact")
+        raise SystemExit("--reinstall requires --artifact (or "
+                         "--registry) pointing at an installed ADSALA "
+                         "artifact")
 
     if args.queue:
         _serve_queue(args, cfg, model, params, tuner, manager, recs)

@@ -50,6 +50,7 @@ import os
 import shutil
 import threading
 import time
+import warnings
 from typing import Any, Callable, Mapping
 
 from repro.core.costmodel import ROUTINES
@@ -63,7 +64,8 @@ from repro.core.installer import (
     resolve_artifact,
     rollback_artifact,
 )
-from repro.core.timing import SimulatedBackend
+from repro.core.registry import ArtifactRegistry, HardwareFingerprint
+from repro.core.timing import SimulatedBackend, backend_from_dict
 from repro.core.tuner import AdsalaTuner
 from repro.core.workload import WorkloadProfile
 from repro.ft.heartbeat import write_heartbeat
@@ -186,13 +188,30 @@ class ReinstallManager:
     worst an uncommitted ``.tmp`` that the next boot sweeps.
     """
 
-    def __init__(self, artifact_dir: str,
-                 recorders: "Any | Mapping[str, Any]", *,
+    def __init__(self, artifact_dir: str | None = None,
+                 recorders: "Any | Mapping[str, Any]" = None, *,
                  backend: Any = None,
+                 registry: "ArtifactRegistry | str | None" = None,
+                 fingerprint: HardwareFingerprint | None = None,
                  cfg: ReinstallConfig | None = None,
                  clock: Callable[[], float] = time.monotonic,
                  phase_hook: Callable[[str], None] | None = None,
                  **tuner_kw: Any) -> None:
+        #: re-installs target this machine's registry cell when a
+        #: registry is given: the loop can never overwrite a
+        #: neighbour's artifact with locally-corrected timings.
+        self.registry = (ArtifactRegistry(registry)
+                         if isinstance(registry, str) else registry)
+        self.fingerprint = fingerprint
+        if self.registry is not None:
+            if self.fingerprint is None:
+                # key-only collection: the cell address needs the stable
+                # fields, not the ~10ms timed probe
+                self.fingerprint = HardwareFingerprint.collect(
+                    probe_sizes=())
+            artifact_dir = self.registry.register(self.fingerprint)
+        if artifact_dir is None:
+            raise ValueError("pass artifact_dir= or registry=")
         self.artifact_dir = artifact_dir
         if resolve_artifact(artifact_dir) is None:
             raise FileNotFoundError(
@@ -203,16 +222,31 @@ class ReinstallManager:
             raise ValueError(f"by={self.cfg.by!r}; expected 'flops' or "
                              "'events'")
         self._recorders: dict[str, Any] = (
-            dict(recorders) if isinstance(recorders, Mapping)
+            {} if recorders is None
+            else dict(recorders) if isinstance(recorders, Mapping)
             else {"all": recorders})
-        self.backend = backend if backend is not None else \
-            SimulatedBackend(seed=0)
         self.trigger = DriftTrigger(threshold=self.cfg.threshold,
                                     hysteresis=self.cfg.hysteresis,
                                     cooldown_s=self.cfg.cooldown_s)
         self._clock = clock
         self._phase_hook = phase_hook
-        self._tuner = AdsalaTuner.from_artifact(artifact_dir, **tuner_kw)
+        self._tuner = AdsalaTuner.from_artifact(
+            artifact_dir, local_fingerprint=self.fingerprint, **tuner_kw)
+        # Re-install with the same KIND of backend that built the loaded
+        # artifact (its "backend" provenance block): a measured install
+        # must not silently drift back to the simulator on re-install.
+        # An explicit backend= always wins; legacy artifacts (no block)
+        # or unreconstructable kinds fall back to the simulator.
+        if backend is None and self._tuner.backend_info is not None:
+            try:
+                backend = backend_from_dict(self._tuner.backend_info)
+            except (ValueError, KeyError, TypeError) as e:
+                warnings.warn(
+                    f"cannot rebuild the artifact's install backend "
+                    f"({e}); re-installs will use the simulated "
+                    "backend", stacklevel=2)
+        self.backend = backend if backend is not None else \
+            SimulatedBackend(seed=0)
         self._state_lock = threading.Lock()
         self._thread: threading.Thread | None = None
         self._installing = False
@@ -368,7 +402,12 @@ class ReinstallManager:
             template = self._install_template()
             icfg = dataclasses.replace(
                 template, workload=profile,
-                seed=template.seed + fire_seq)
+                seed=template.seed + fire_seq,
+                # keep the cell's provenance through re-installs: the
+                # new artifact is for the same machine (this one)
+                fingerprint=(self.fingerprint
+                             if self.fingerprint is not None
+                             else self._tuner.fingerprint))
             self._phase("gather")
             data = gather_data(self.backend, icfg)
             self._phase("fit")

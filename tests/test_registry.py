@@ -1,0 +1,520 @@
+"""Per-architecture artifact registry (ISSUE 10).
+
+Covers the fingerprint (JSON round-trip, cross-process key stability,
+nearest-neighbour ordering), the per-cell PR-8 lifecycle
+(commit / rollback / crash-window repair inside a namespaced root),
+artifact provenance (fingerprint + backend blocks, legacy artifacts,
+warn-once mismatch), transfer installs (regret no worse than a scratch
+install at equal calibration budget), the hardened MeasuredCPUBackend
+(median-of-k variance reduction) and the registry-backed
+ReinstallManager.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import subprocess
+import sys
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.costmodel import GemmConfig, TPUSpec
+from repro.core.halton import sample_gemm_dims
+from repro.core.installer import (
+    ARTIFACT_COMMIT,
+    InstallConfig,
+    artifact_prev_dir,
+    artifact_tmp_dir,
+    install,
+    is_artifact,
+    load_artifact,
+    transfer_gather,
+)
+from repro.core.registry import (
+    FINGERPRINT_FILE,
+    ArtifactRegistry,
+    HardwareFingerprint,
+    resolve_serving_artifact,
+)
+from repro.core.timing import (
+    MeasuredCPUBackend,
+    SimulatedBackend,
+    backend_from_dict,
+    describe_backend,
+)
+from repro.core.tuner import AdsalaTuner
+
+
+def _fp(model: str = "Test CPU", cores: int = 8,
+        mesh: tuple = (1,), gflops: tuple = ()) -> HardwareFingerprint:
+    sizes = tuple(64 for _ in gflops)
+    return HardwareFingerprint(cpu_model=model, cores=cores,
+                               cache_kb=(32, 1024, 32768),
+                               mesh_shape=mesh, probe_sizes=sizes,
+                               probe_gflops=gflops)
+
+
+def _tiny_cfg(**kw) -> InstallConfig:
+    base = dict(n_samples=24, repeats=1, max_chips=1,
+                tile_ids=(0, 1, 3, 5), models=("lightgbm",),
+                routines=("gemm", "syrk"), cv_splits=2,
+                dim_max=2048, grid_budget="small", seed=0)
+    base.update(kw)
+    return InstallConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# fingerprint
+# ---------------------------------------------------------------------------
+
+class TestFingerprint:
+    def test_collect_and_json_roundtrip(self, tmp_path):
+        fp = HardwareFingerprint.collect(mesh_shape=(2, 4),
+                                         probe_sizes=(64,),
+                                         probe_repeats=1)
+        assert fp.cores >= 1 and fp.cpu_model
+        assert fp.mesh_shape == (2, 4)
+        assert len(fp.probe_gflops) == 1 and fp.probe_gflops[0] > 0
+        # dict -> json -> dict -> object is lossless
+        back = HardwareFingerprint.from_dict(
+            json.loads(json.dumps(fp.to_dict())))
+        assert back == fp
+        assert back.key() == fp.key()
+        # file round-trip too
+        p = tmp_path / "fp.json"
+        fp.save(str(p))
+        assert HardwareFingerprint.load(str(p)) == fp
+
+    def test_key_ignores_probe_jitter(self):
+        a = _fp(gflops=(50.0,))
+        b = _fp(gflops=(57.5,))          # same box, different turbo
+        assert a.key() == b.key()
+        assert a.distance(b) > 0.0        # but the probe still separates
+
+    def test_key_stable_across_processes(self):
+        fp = HardwareFingerprint.collect(probe_sizes=())
+        src = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "src")
+        env = dict(os.environ, PYTHONPATH=src)
+        out = subprocess.run(
+            [sys.executable, "-c",
+             "from repro.core.registry import HardwareFingerprint;"
+             "print(HardwareFingerprint.collect(probe_sizes=()).key())"],
+            env=env, capture_output=True, text=True, check=True,
+            timeout=120)
+        assert out.stdout.strip() == fp.key()
+
+    def test_distance_orders_architectures(self):
+        me = _fp("Zen 3", 16, gflops=(100.0,))
+        same_sku = _fp("Zen 3", 16, gflops=(95.0,))
+        fewer_cores = _fp("Zen 3", 8, gflops=(60.0,))
+        other_arch = _fp("Cascade Lake", 16, gflops=(100.0,))
+        other_mesh = _fp("Zen 3", 16, mesh=(2, 2), gflops=(100.0,))
+        assert me.distance(me) == 0.0
+        d = [me.distance(x) for x in
+             (same_sku, fewer_cores, other_arch)]
+        assert d[0] < d[1] < d[2]
+        assert me.distance(other_mesh) > me.distance(same_sku)
+        # symmetric
+        assert me.distance(other_arch) == pytest.approx(
+            other_arch.distance(me))
+
+    def test_mismatched_probe_sizes_still_comparable(self):
+        a = _fp(gflops=(50.0,))
+        b = dataclasses.replace(_fp(), probe_sizes=(128,),
+                                probe_gflops=(80.0,))
+        assert a.distance(b) == 0.0       # no common size: stable only
+
+
+# ---------------------------------------------------------------------------
+# registry addressing + per-cell lifecycle
+# ---------------------------------------------------------------------------
+
+class TestRegistryCells:
+    def test_register_resolve_nearest(self, tmp_path):
+        reg = ArtifactRegistry(str(tmp_path / "reg"))
+        a = _fp("Arch A", 8, gflops=(50.0,))
+        b = _fp("Arch B", 16, gflops=(80.0,))
+        c = _fp("Arch A", 4, gflops=(30.0,))
+        assert reg.resolve(a) is None            # cold cell
+        assert reg.nearest(a) is None            # empty registry
+        install(SimulatedBackend(seed=0), _tiny_cfg(fingerprint=a),
+                artifact_dir=reg.register(a))
+        install(SimulatedBackend(seed=1), _tiny_cfg(fingerprint=b),
+                artifact_dir=reg.register(b))
+        assert reg.resolve(a) == reg.artifact_dir(a)
+        assert {fp.key() for fp in reg.fingerprints()} == \
+            {a.key(), b.key()}
+        # c shares a's cpu model: a's cell must win over b's
+        cell, art = reg.nearest(c)
+        assert cell.key() == a.key() and art == reg.artifact_dir(a)
+        # a's own nearest excludes itself
+        cell, _ = reg.nearest(a)
+        assert cell.key() == b.key()
+        # registering c (without installing) adds a cell but nearest
+        # only returns populated ones
+        reg.register(c)
+        cell, _ = reg.nearest(c)
+        assert cell.key() == a.key()
+
+    def test_unreadable_sidecar_warns_and_skips(self, tmp_path):
+        reg = ArtifactRegistry(str(tmp_path / "reg"))
+        reg.register(_fp("A"))
+        bad = tmp_path / "reg" / "bad-cell"
+        bad.mkdir()
+        (bad / FINGERPRINT_FILE).write_text("{not json")
+        with pytest.warns(UserWarning, match="unreadable"):
+            fps = reg.fingerprints()
+        assert len(fps) == 1
+
+    def test_install_commit_and_rollback_in_cell(self, tmp_path):
+        reg = ArtifactRegistry(str(tmp_path / "reg"))
+        fp = _fp("Arch A")
+        r1 = reg.install(fp, SimulatedBackend(seed=0), _tiny_cfg(seed=0))
+        art = reg.artifact_dir(fp)
+        assert r1.artifact_dir == art and is_artifact(art)
+        assert json.load(open(os.path.join(
+            art, "config.json")))["install"]["seed"] == 0
+        # second install displaces the first into .prev
+        reg.install(fp, SimulatedBackend(seed=1), _tiny_cfg(seed=1))
+        assert json.load(open(os.path.join(
+            art, "config.json")))["install"]["seed"] == 1
+        assert is_artifact(artifact_prev_dir(art))
+        # rollback restores the first, byte-for-byte
+        reg.rollback(fp)
+        assert json.load(open(os.path.join(
+            art, "config.json")))["install"]["seed"] == 0
+
+    def test_crash_window_repair_in_cell(self, tmp_path):
+        reg = ArtifactRegistry(str(tmp_path / "reg"))
+        fp = _fp("Arch A")
+        reg.install(fp, SimulatedBackend(seed=0), _tiny_cfg())
+        art = reg.artifact_dir(fp)
+        # a killed install's uncommitted tmp: swept, live survives
+        tmp = artifact_tmp_dir(art)
+        os.makedirs(tmp)
+        with open(os.path.join(tmp, "config.json"), "w") as f:
+            f.write("{}")                 # half-written, no COMMIT
+        assert reg.resolve(fp) == art
+        assert not os.path.isdir(tmp)
+        # mid-commit crash: live renamed to .prev, new never promoted
+        os.replace(art, artifact_prev_dir(art))
+        assert reg.resolve(fp) == art     # repaired from .prev
+        assert is_artifact(art)
+
+    def test_adopt_copies_donor_atomically(self, tmp_path):
+        reg = ArtifactRegistry(str(tmp_path / "reg"))
+        donor_fp, cold_fp = _fp("Arch A"), _fp("Arch B")
+        reg.install(donor_fp, SimulatedBackend(seed=0), _tiny_cfg())
+        art = reg.adopt(cold_fp, reg.artifact_dir(donor_fp))
+        assert art == reg.artifact_dir(cold_fp) and is_artifact(art)
+        # the donor keeps its own artifact
+        assert is_artifact(reg.artifact_dir(donor_fp))
+        with pytest.raises(FileNotFoundError):
+            reg.adopt(cold_fp, str(tmp_path / "nowhere"))
+
+    def test_resolve_serving_artifact_fallback(self, tmp_path):
+        root = str(tmp_path / "reg")
+        reg = ArtifactRegistry(root)
+        a = _fp("Arch A", 8)
+        reg.install(a, SimulatedBackend(seed=0), _tiny_cfg())
+        # exact hit: own cell, no warning
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            r = resolve_serving_artifact(root, fingerprint=a)
+        assert r.exact and r.path == reg.artifact_dir(a)
+        # cold node: nearest neighbour with a warning
+        b = _fp("Arch B", 16)
+        with pytest.warns(UserWarning, match="nearest cell"):
+            r = resolve_serving_artifact(root, fingerprint=b)
+        assert not r.exact and r.cell.key() == a.key()
+        assert r.path == reg.artifact_dir(a)
+        # fallback disabled: nothing resolves
+        r = resolve_serving_artifact(root, fingerprint=b,
+                                     allow_fallback=False)
+        assert r.path is None and r.cell is None
+
+
+# ---------------------------------------------------------------------------
+# provenance: fingerprint/backend blocks, legacy artifacts, warn-once
+# ---------------------------------------------------------------------------
+
+class TestProvenance:
+    @pytest.fixture(scope="class")
+    def artifact(self, tmp_path_factory):
+        d = str(tmp_path_factory.mktemp("prov") / "art")
+        fp = _fp("Arch A", 8)
+        install(SimulatedBackend(seed=0), _tiny_cfg(fingerprint=fp),
+                artifact_dir=d)
+        return d, fp
+
+    def test_blocks_persisted(self, artifact):
+        d, fp = artifact
+        config = json.load(open(os.path.join(d, "config.json")))
+        assert config["fingerprint"]["key"] == fp.key()
+        assert config["backend"]["kind"] == "simulated"
+        assert config["transfer"] is None
+        assert os.path.isfile(os.path.join(d, "grid.npz"))
+
+    def test_tuner_surfaces_provenance(self, artifact):
+        d, fp = artifact
+        t = AdsalaTuner.from_artifact(d)
+        assert t.fingerprint.key() == fp.key()
+        assert t.backend_info["kind"] == "simulated"
+        assert backend_from_dict(t.backend_info).spec == TPUSpec()
+
+    def test_mismatch_warns_once_not_per_dispatch(self, artifact):
+        d, _ = artifact
+        other = _fp("Arch B", 4)
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            t = AdsalaTuner.from_artifact(d, local_fingerprint=other)
+            for _ in range(25):           # dispatch-path re-checks
+                assert not t.check_fingerprint(other)
+        assert len([x for x in w
+                    if "installed for" in str(x.message)]) == 1
+
+    def test_match_does_not_warn(self, artifact):
+        d, fp = artifact
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            t = AdsalaTuner.from_artifact(d, local_fingerprint=fp)
+        assert t.check_fingerprint(fp)
+
+    def test_legacy_artifact_without_blocks_loads(self, artifact,
+                                                  tmp_path):
+        d, fp = artifact
+        legacy = str(tmp_path / "legacy")
+        shutil.copytree(d, legacy)
+        config = json.load(open(os.path.join(legacy, "config.json")))
+        for key in ("fingerprint", "backend", "transfer"):
+            config.pop(key, None)
+        json.dump(config, open(os.path.join(legacy, "config.json"), "w"))
+        os.remove(os.path.join(legacy, "grid.npz"))
+        # load_artifact and from_artifact both succeed, provenance-free,
+        # and the mismatch check is a silent no-op
+        _, _, cands, conf = load_artifact(legacy)
+        assert cands and "fingerprint" not in conf
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            t = AdsalaTuner.from_artifact(legacy, local_fingerprint=fp)
+        assert t.fingerprint is None and t.backend_info is None
+        assert t.check_fingerprint(fp)
+        # a grid-less legacy artifact cannot be a transfer donor
+        with pytest.raises(FileNotFoundError, match="grid.npz"):
+            transfer_gather(SimulatedBackend(seed=0), _tiny_cfg(),
+                            legacy)
+
+
+# ---------------------------------------------------------------------------
+# transfer installs
+# ---------------------------------------------------------------------------
+
+def _regret(tuner: AdsalaTuner, backend: SimulatedBackend,
+            eval_dims: np.ndarray, names: list[str]) -> float:
+    """Mean oracle regret over the tuner's own candidates (clean)."""
+    pred = tuner.predicted_times_many([tuple(d) for d in eval_dims],
+                                      routines=names)
+    clean = backend.time_routine_clean_batch(eval_dims, tuner.candidates,
+                                             routines=names)
+    chosen = clean[np.arange(len(eval_dims)), np.argmin(pred, axis=1)]
+    return float(np.mean(chosen / np.maximum(clean.min(axis=1), 1e-12)
+                         - 1.0))
+
+
+class TestTransferInstall:
+    def test_transfer_beats_scratch_at_equal_budget(self, tmp_path):
+        """The ISSUE-10 satellite contract, deterministic (simulated):
+        donor on arch A, local arch B with shifted bandwidth/compute; a
+        transfer install's oracle regret must not exceed a scratch
+        install's that timed the SAME number of local cells."""
+        donor_backend = SimulatedBackend(seed=0)
+        spec_b = dataclasses.replace(
+            TPUSpec(), hbm_bw=TPUSpec().hbm_bw * 0.45,
+            peak_flops=TPUSpec().peak_flops * 0.8)
+        fp_a, fp_b = _fp("Arch A", 8), _fp("Arch B", 16)
+
+        donor_dir = str(tmp_path / "donor")
+        cfg = _tiny_cfg(n_samples=40, fingerprint=fp_a)
+        install(donor_backend, cfg, artifact_dir=donor_dir)
+
+        local = SimulatedBackend(spec=spec_b, seed=1)
+        tcfg = _tiny_cfg(n_samples=40, fingerprint=fp_b,
+                         calibration_dims=8, seed=1)
+        tdir = str(tmp_path / "transfer")
+        install(local, tcfg, artifact_dir=tdir, transfer_from=donor_dir)
+        tconf = json.load(open(os.path.join(tdir, "config.json")))
+        cal_cells = tconf["transfer"]["calibration_cells"]
+        donor_cells = tconf["transfer"]["donor_cells"]
+        assert 0 < cal_cells <= 0.10 * donor_cells
+
+        # scratch install on arch B timing the same number of cells:
+        # dense grid over n = cal_cells // C dims
+        n_cfgs = len(tconf["candidates"])
+        sdir = str(tmp_path / "scratch")
+        scfg = _tiny_cfg(n_samples=max(4, cal_cells // n_cfgs),
+                         fingerprint=fp_b, seed=1)
+        install(SimulatedBackend(spec=spec_b, seed=1), scfg,
+                artifact_dir=sdir)
+
+        eval_dims = sample_gemm_dims(
+            64, mem_limit_bytes=cfg.mem_limit_bytes, dim_min=cfg.dim_min,
+            dim_max=cfg.dim_max, dtype_bytes=cfg.dtype_bytes, seed=123)
+        names = [cfg.routines[i % len(cfg.routines)]
+                 for i in range(len(eval_dims))]
+        clean_backend = SimulatedBackend(spec=spec_b, seed=0)
+        r_transfer = _regret(AdsalaTuner.from_artifact(tdir),
+                             clean_backend, eval_dims, names)
+        r_scratch = _regret(AdsalaTuner.from_artifact(sdir),
+                            clean_backend, eval_dims, names)
+        assert r_transfer <= r_scratch + 0.01, (
+            f"transfer regret {r_transfer:.4f} worse than scratch "
+            f"{r_scratch:.4f} at equal calibration budget "
+            f"({cal_cells} cells)")
+
+    def test_transfer_block_and_correction(self, tmp_path):
+        donor_dir = str(tmp_path / "donor")
+        cfg = _tiny_cfg(n_samples=30)
+        install(SimulatedBackend(seed=0), cfg, artifact_dir=donor_dir)
+
+        # local machine exactly 3x slower: the fitted log-delta must
+        # recover ~log(3) per routine
+        class Slower:
+            def __init__(self, inner, factor):
+                self.inner, self.factor = inner, factor
+
+            def time_routine(self, m, k, n, c, *, routine="gemm"):
+                return self.factor * self.inner.time_routine(
+                    m, k, n, c, routine=routine)
+
+        slower = Slower(SimulatedBackend(seed=7), 3.0)
+        data, info = transfer_gather(
+            slower, _tiny_cfg(calibration_dims=10), donor_dir)
+        assert info["calibration_dims"] == 10
+        assert info["donor_fingerprint"] is None    # donor had none set
+        for routine, delta in info["log_delta_per_routine"].items():
+            assert delta == pytest.approx(np.log(3.0), abs=0.35), (
+                f"{routine}: fitted delta {delta:.3f} far from "
+                f"log(3)={np.log(3.0):.3f}")
+        # corrected non-measured cells scaled by ~3x vs the donor grid
+        from repro.core.installer import GatheredData
+        donor = GatheredData.load(os.path.join(donor_dir, "grid.npz"))
+        ratio = data.times / donor.times
+        assert np.median(ratio) == pytest.approx(3.0, rel=0.35)
+
+    def test_registry_transfer_nearest(self, tmp_path):
+        reg = ArtifactRegistry(str(tmp_path / "reg"))
+        fp_a, fp_b = _fp("Arch A", 8), _fp("Arch B", 16)
+        reg.install(fp_a, SimulatedBackend(seed=0), _tiny_cfg())
+        rep = reg.install(fp_b, SimulatedBackend(seed=1),
+                          _tiny_cfg(calibration_dims=6),
+                          transfer_from="nearest")
+        conf = json.load(open(os.path.join(rep.artifact_dir,
+                                           "config.json")))
+        assert conf["transfer"]["donor"] == os.path.abspath(
+            reg.artifact_dir(fp_a))
+        assert conf["transfer"]["donor_fingerprint"]["key"] == fp_a.key()
+        assert conf["fingerprint"]["key"] == fp_b.key()
+        # nearest with an empty registry degrades to a scratch install
+        reg2 = ArtifactRegistry(str(tmp_path / "reg2"))
+        rep2 = reg2.install(fp_a, SimulatedBackend(seed=0), _tiny_cfg(),
+                            transfer_from="nearest")
+        conf2 = json.load(open(os.path.join(rep2.artifact_dir,
+                                            "config.json")))
+        assert conf2["transfer"] is None
+
+
+# ---------------------------------------------------------------------------
+# hardened measured backend + provenance round-trip
+# ---------------------------------------------------------------------------
+
+class TestMeasuredBackend:
+    def test_repeats_validation(self):
+        with pytest.raises(ValueError):
+            MeasuredCPUBackend(repeats=0)
+        with pytest.raises(ValueError):
+            MeasuredCPUBackend(warmup=-1)
+
+    def test_median_of_k_reduces_variance(self):
+        """The ISSUE-10 hardening satellite: warmup + median-of-k must
+        not be noisier than raw single-shot timing (and on shared CI
+        boxes it is substantially quieter)."""
+        cfg = GemmConfig(n_chips=1, partition="M", tile_id=0)
+        noisy = MeasuredCPUBackend(repeats=1, warmup=0, seed=0)
+        steady = MeasuredCPUBackend(repeats=5, warmup=1, seed=0)
+        m = k = n = 160
+        noisy.time_routine(m, k, n, cfg)      # page in buffers once
+        raw = np.asarray([noisy.time_routine(m, k, n, cfg)
+                          for _ in range(17)])
+        hard = np.asarray([steady.time_routine(m, k, n, cfg)
+                           for _ in range(17)])
+        spread = np.subtract(*np.percentile(raw, [75, 25]))
+        spread_h = np.subtract(*np.percentile(hard, [75, 25]))
+        # strict improvement when there is noise to remove; an
+        # already-quiet box passes via the 2%-of-median floor
+        assert spread_h <= max(spread, 0.02 * float(np.median(hard))), (
+            f"median-of-5 IQR {spread_h:.2e}s not below single-shot "
+            f"IQR {spread:.2e}s")
+
+    def test_backend_provenance_roundtrip(self):
+        m = MeasuredCPUBackend(max_dim=512, seed=3, repeats=4, warmup=2)
+        d = json.loads(json.dumps(describe_backend(m)))
+        back = backend_from_dict(d)
+        assert isinstance(back, MeasuredCPUBackend)
+        assert (back.max_dim, back.seed, back.repeats, back.warmup) == \
+            (512, 3, 4, 2)
+        s = SimulatedBackend(spec=dataclasses.replace(
+            TPUSpec(), hbm_bw=1e11), dtype_bytes=4, seed=9)
+        back = backend_from_dict(json.loads(json.dumps(
+            describe_backend(s))))
+        assert back.spec == s.spec and back.dtype_bytes == 4
+        with pytest.raises(ValueError, match="cannot reconstruct"):
+            backend_from_dict({"kind": "gpu-cluster"})
+
+
+# ---------------------------------------------------------------------------
+# registry-backed serving loop
+# ---------------------------------------------------------------------------
+
+class TestRegistryServing:
+    def test_reinstall_manager_targets_cell(self, tmp_path):
+        from repro.kernels.recorder import DispatchRecorder
+        from repro.serve import ReinstallManager
+
+        reg = ArtifactRegistry(str(tmp_path / "reg"))
+        fp = _fp("Arch A", 8)
+        reg.install(fp, SimulatedBackend(seed=0), _tiny_cfg())
+        mgr = ReinstallManager(registry=reg, fingerprint=fp,
+                               recorders=DispatchRecorder())
+        assert mgr.artifact_dir == reg.artifact_dir(fp)
+        assert mgr.fingerprint.key() == fp.key()
+        # backend rebuilt from the artifact's provenance block
+        assert isinstance(mgr.backend, SimulatedBackend)
+        # an empty cell refuses to serve
+        with pytest.raises(FileNotFoundError):
+            ReinstallManager(registry=reg, fingerprint=_fp("Cold", 2),
+                             recorders=DispatchRecorder())
+        with pytest.raises(ValueError, match="artifact_dir"):
+            ReinstallManager(recorders=DispatchRecorder())
+
+    def test_manager_rebuilds_measured_backend(self, tmp_path):
+        from repro.kernels.recorder import DispatchRecorder
+        from repro.serve import ReinstallManager
+
+        art = str(tmp_path / "art")
+        cfg = _tiny_cfg(n_samples=10, routines=("gemm",),
+                        dim_max=96, mem_limit_mb=2)
+        install(MeasuredCPUBackend(max_dim=128, repeats=2), cfg,
+                artifact_dir=art)
+        mgr = ReinstallManager(art, DispatchRecorder())
+        assert isinstance(mgr.backend, MeasuredCPUBackend)
+        assert mgr.backend.repeats == 2
+        # explicit backend always wins over provenance
+        mgr2 = ReinstallManager(art, DispatchRecorder(),
+                                backend=SimulatedBackend(seed=5))
+        assert isinstance(mgr2.backend, SimulatedBackend)
